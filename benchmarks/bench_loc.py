@@ -1,0 +1,65 @@
+"""Claim C4: 75 % LOC reduction for OOC kernels written against the API.
+
+Counts non-blank, non-comment, non-docstring lines of:
+  numerator   — examples/mmooc_via_api.py ``mmooc()`` (unified API), and the
+                paper-Fig.2-equivalent driver in repro.core.oocgemm.
+  denominator — the three hand-written backend implementations in
+                benchmarks/direct_impls.py (host / vmem / mesh tiers).
+"""
+
+from __future__ import annotations
+
+import ast
+import inspect
+import os
+
+
+def _code_lines_of(obj) -> int:
+    src = inspect.getsource(obj)
+    tree = ast.parse(src)
+    doc_lines = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef, ast.Module)):
+            if (node.body and isinstance(node.body[0], ast.Expr)
+                    and isinstance(node.body[0].value, ast.Constant)
+                    and isinstance(node.body[0].value.value, str)):
+                d = node.body[0]
+                doc_lines.update(range(d.lineno, d.end_lineno + 1))
+    n = 0
+    for i, line in enumerate(src.splitlines(), start=1):
+        t = line.strip()
+        if t and not t.startswith("#") and i not in doc_lines:
+            n += 1
+    return n
+
+
+def run():
+    from benchmarks import direct_impls
+    from examples.mmooc_via_api import mmooc
+
+    api_loc = _code_lines_of(mmooc)
+    direct = {
+        "host": _code_lines_of(direct_impls.direct_host_ooc_gemm),
+        "vmem": _code_lines_of(direct_impls.direct_vmem_ooc_gemm),
+        "mesh": _code_lines_of(direct_impls.direct_mesh_ooc_gemm),
+    }
+    total_direct = sum(direct.values())
+    # the paper compares one API implementation vs per-device rewrites
+    reduction = (1 - api_loc * 3 / (3 * total_direct / 1)) * 100
+    reduction = (1 - (api_loc) / (total_direct / 1)) * 100
+    rows = [{
+        "name": "loc_api_mmooc",
+        "us_per_call": 0.0,
+        "derived": f"{api_loc} lines (runs on all 3 tiers)",
+    }]
+    for k, v in direct.items():
+        rows.append({"name": f"loc_direct_{k}", "us_per_call": 0.0,
+                     "derived": f"{v} lines (single tier)"})
+    rows.append({
+        "name": "loc_reduction",
+        "us_per_call": 0.0,
+        "derived": (f"{api_loc} vs {total_direct} lines = "
+                    f"{reduction:.0f}% reduction (paper: 75%)"),
+    })
+    return rows

@@ -1,0 +1,77 @@
+"""Claims C3 + C5 (paper Fig. 5a/5c + §VI Phi discussion).
+
+C3: overlapped 2-stream pipeline vs. CUBLAS-XT-style vendor schedule
+    (non-overlapping, fixed small tile, B re-sent per tile) — >= 2.3x on
+    K40c-like, ~4x on P100-like engine models.
+C5: pipeline width is hardware-dependent — buffer-depth sweep under
+    GPU-like vs Phi-like (shared transfer engine, thread-split 0.76x) vs
+    TPU-v5e tiers.
+"""
+
+from __future__ import annotations
+
+from repro.core import (build_gemm_schedule, build_vendor_schedule, gpu_like,
+                        phi_like, plan_gemm_partition, simulate, tpu_v5e_ici,
+                        tpu_v5e_vmem, HardwareModel)
+
+
+def p100_like():
+    return gpu_like(flops=3.9e12, pcie=12.5e9)
+
+
+def run():
+    rows = []
+    # ---- C3: lib vs vendor across N (Fig. 5a K40c / 5c P100) ----
+    K = 8192
+    for label, hw, peak in (("k40c", gpu_like(), 1.16e12),
+                            ("p100", p100_like(), 3.9e12)):
+        for N in (16384, 32768, 46080):
+            budget = 3 * (8192 * 8192) * 8
+            part = plan_gemm_partition(N, N, K, budget, 8)
+            lib = simulate(build_gemm_schedule(part, 2, 2), hw)
+            ven = simulate(build_vendor_schedule(part, tile=512), hw)
+            rows.append({
+                "name": f"c3_{label}_N{N}",
+                "us_per_call": lib.makespan * 1e6,
+                "derived": (f"lib={lib.effective_flops/1e12:.2f}TF "
+                            f"({lib.effective_flops/peak*100:.0f}%pk) "
+                            f"vendor={ven.effective_flops/1e12:.2f}TF "
+                            f"speedup={ven.makespan/lib.makespan:.2f}x "
+                            f"(paper: >=2.3x K40c, ~4x P100)"),
+            })
+
+    # ---- C5: buffer/stream sweep per hardware ----
+    part = plan_gemm_partition(16384, 16384, 8192, 3 * 8192 * 8192 * 8, 8)
+    for mk, name in ((lambda ns: gpu_like(), "gpu"),
+                     (lambda ns: phi_like(nstreams=ns), "phi"),
+                     (lambda ns: tpu_v5e_vmem(), "tpu_vmem")):
+        for ns, nbuf in ((1, 1), (1, 2), (2, 2), (2, 4)):
+            hw = mk(ns)
+            res = simulate(build_gemm_schedule(part, ns, nbuf), hw)
+            rows.append({
+                "name": f"c5_{name}_s{ns}b{nbuf}",
+                "us_per_call": res.makespan * 1e6,
+                "derived": (f"{res.effective_flops/1e12:.2f} TFLOP/s "
+                            f"exec_util={res.utilization('exec'):.2f}"),
+            })
+
+    # ---- TPU tiers: where does the paper's pipeline land on v5e ----
+    part_v = plan_gemm_partition(8192, 8192, 8192, 64 * 2**20, 2)
+    res = simulate(build_gemm_schedule(part_v, 2, 2), tpu_v5e_vmem())
+    rows.append({
+        "name": "tpu_vmem_tier",
+        "us_per_call": res.makespan * 1e6,
+        "derived": (f"{res.effective_flops/1e12:.1f} TF "
+                    f"({res.effective_flops/197e12*100:.0f}% of v5e peak), "
+                    f"DMA hidden: in_util={res.utilization('in'):.2f}"),
+    })
+    res = simulate(build_gemm_schedule(part_v, 2, 2), tpu_v5e_ici())
+    rows.append({
+        "name": "tpu_ici_tier",
+        "us_per_call": res.makespan * 1e6,
+        "derived": (f"{res.effective_flops/1e12:.1f} TF — ICI-streamed "
+                    f"blocks (SUMMA tier); in_util="
+                    f"{res.utilization('in'):.2f} "
+                    f"exec_util={res.utilization('exec'):.2f}"),
+    })
+    return rows

@@ -1,0 +1,57 @@
+"""Roofline table readout: renders experiments/dryrun/*.json artifacts.
+
+Not a timing benchmark — this is the §Roofline deliverable's presentation
+layer, kept in benchmarks/ so ``python -m benchmarks.run`` emits the full
+per-cell table alongside the paper-claim benches.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_cells(pattern="*__single.json"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run():
+    rows = []
+    cells = load_cells()
+    if not cells:
+        return [{"name": "roofline", "us_per_call": 0.0,
+                 "derived": f"no dry-run artifacts in {DRYRUN_DIR} — run "
+                            "`python -m repro.launch.dryrun --all`"}]
+    for c in cells:
+        name = f"roofline_{c['arch']}__{c['shape']}"
+        if c["status"] == "SKIP":
+            rows.append({"name": name, "us_per_call": 0.0,
+                         "derived": f"SKIP: {c['reason']}"})
+            continue
+        if c["status"] != "OK" or "roofline" not in c:
+            rows.append({"name": name, "us_per_call": 0.0,
+                         "derived": f"{c['status']}: "
+                                    f"{c.get('error', '')[:120]}"})
+            continue
+        r = c["roofline"]
+        rows.append({
+            "name": name,
+            "us_per_call": r["t_bound_s"] * 1e6 if "t_bound_s" in r else
+            max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]) * 1e6,
+            "derived": (f"Tc={r['t_compute_s']:.3f}s "
+                        f"Tm={r['t_memory_s']:.3f}s "
+                        f"Tx={r['t_collective_s']:.3f}s "
+                        f"bound={r['bottleneck']} "
+                        f"frac={r['roofline_fraction']:.3f} "
+                        f"useful={r['useful_flops_ratio']:.2f} "
+                        f"hbm={c['device_hbm_bytes']/2**30:.1f}GiB "
+                        f"fits={c['fits_hbm']}"),
+        })
+    return rows

@@ -1,0 +1,40 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV:
+  bench_overhead    — claim C1  (<=10 % abstraction overhead; paper §VI)
+  bench_transition  — claim C2  (0 % loss at the in/out-of-core boundary;
+                                 Fig. 5 green line)
+  bench_pipeline    — claims C3+C5 (vs CUBLAS-XT-style vendor schedule;
+                                 stream-width vs hardware; Fig. 5a/5b/5c)
+  bench_loc         — claim C4  (75 % LOC reduction)
+  bench_roofline    — §Roofline table from the dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_loc, bench_overhead, bench_pipeline,
+                            bench_roofline, bench_transition)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (bench_overhead, bench_transition, bench_pipeline,
+                bench_loc, bench_roofline):
+        try:
+            for row in mod.run():
+                derived = str(row["derived"]).replace(",", ";")
+                print(f"{row['name']},{row['us_per_call']:.1f},{derived}")
+        except Exception as e:
+            failures += 1
+            print(f"{mod.__name__},0.0,ERROR {type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark module(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Batched serving example: prefill a prompt batch, decode with KV cache.
+
+Uses the same prefill/decode step functions the multi-pod dry-run lowers for
+the ``decode_32k`` / ``long_500k`` cells — here at smoke scale on CPU.
+
+  PYTHONPATH=src python examples/serve_decode.py
+  PYTHONPATH=src python examples/serve_decode.py --arch zamba2-1.2b  # SSM+attn
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    args = ap.parse_args()
+    out = serve_main(["--arch", args.arch, "--smoke",
+                      "--batch", "4", "--prompt-len", "32", "--gen", "16"])
+    assert out["tokens"].shape == (4, 15)
+    print("serve_decode OK")

@@ -1,0 +1,94 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun/*.json."""
+
+import glob
+import json
+import os
+import sys
+
+DIR = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def load(mesh):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(DIR, f"*__{mesh}.json"))):
+        c = json.load(open(p))
+        out[(c["arch"], c["shape"])] = c
+    return out
+
+
+def dryrun_table():
+    single = load("single")
+    multi = load("multi")
+    print("| arch | shape | 16x16: status / GiB-per-chip / fits | "
+          "2x16x16: status / GiB / fits | proof compile (s) |")
+    print("|---|---|---|---|---|")
+    for (a, s), c in single.items():
+        m = multi.get((a, s), {})
+
+        def cell(c):
+            if not c:
+                return "—"
+            if c["status"] == "SKIP":
+                return "SKIP"
+            if c["status"] != "OK":
+                return "FAIL"
+            return (f"OK / {fmt_bytes(c['device_hbm_bytes'])} / "
+                    f"{'Y' if c['fits_hbm'] else 'N'}")
+        pc = c.get("proof_compile_s", "—")
+        mc = m.get("proof_compile_s", "—")
+        print(f"| {a} | {s} | {cell(c)} | {cell(m)} | {pc} / {mc} |")
+
+
+def roofline_table():
+    single = load("single")
+    print("| arch | shape | Tc (s) | Tm (s) | Tx (s) | bound | frac | "
+          "useful | MODEL_FLOPS | HLO_FLOPS(tot) |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for (a, s), c in single.items():
+        if c["status"] == "SKIP":
+            print(f"| {a} | {s} | — | — | — | SKIP: {c['reason'][:40]} "
+                  f"| | | | |")
+            continue
+        if "roofline" not in c:
+            print(f"| {a} | {s} | — | — | — | {c['status']} | | | | |")
+            continue
+        r = c["roofline"]
+        print(f"| {a} | {s} | {r['t_compute_s']:.4f} | {r['t_memory_s']:.4f}"
+              f" | {r['t_collective_s']:.4f} | {r['bottleneck']} "
+              f"| {r['roofline_fraction']:.3f} | {r['useful_flops_ratio']:.2f}"
+              f" | {c['model_flops']:.2e} "
+              f"| {c['flops_per_device']*c['chips']:.2e} |")
+
+
+def collectives_table():
+    single = load("single")
+    print("| arch | shape | all-reduce GiB | all-gather GiB | "
+          "reduce-scatter GiB | a2a GiB | permute GiB |")
+    print("|---|---|---|---|---|---|---|")
+    for (a, s), c in single.items():
+        if c.get("status") != "OK" or "collectives" not in c:
+            continue
+        k = c["collectives"]
+        g = lambda n: f"{k.get(n, 0)/2**30:.2f}"
+        print(f"| {a} | {s} | {g('all-reduce')} | {g('all-gather')} | "
+              f"{g('reduce-scatter')} | {g('all-to-all')} | "
+              f"{g('collective-permute')} |")
+
+
+if __name__ == "__main__":
+    which = sys.argv[2] if len(sys.argv) > 2 else "all"
+    if which in ("all", "dryrun"):
+        print("### Dry-run matrix\n")
+        dryrun_table()
+        print()
+    if which in ("all", "roofline"):
+        print("### Roofline (single-pod 16x16, per-cell)\n")
+        roofline_table()
+        print()
+    if which in ("all", "collectives"):
+        print("### Collective wire bytes per device (single-pod)\n")
+        collectives_table()

@@ -1,0 +1,12 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    ArchConfig,
+    SHAPES,
+    ShapeConfig,
+    cell_is_supported,
+    get_arch,
+    input_specs,
+)
+
+__all__ = ["ARCH_IDS", "ArchConfig", "SHAPES", "ShapeConfig",
+           "cell_is_supported", "get_arch", "input_specs"]

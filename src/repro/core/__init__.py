@@ -1,0 +1,64 @@
+"""repro.core — libhclooc's contribution, TPU-native.
+
+Public surface:
+  * plan_gemm_partition / plan_attention_partition  (hclMatrixPartitioner)
+  * build_gemm_schedule / build_attention_schedule / build_vendor_schedule
+  * validate_schedule, simulate, hardware models
+  * ooc_gemm / ooc_attention                        (MMOOC and friends)
+  * HostOocRuntime / VmemOocRuntime / MeshOocRuntime (hclRuntime hierarchy)
+  * api: hcl-prefixed facade for paper-parity code
+"""
+
+from repro.core.oocgemm import is_in_core, ooc_gemm, plan_for_device
+from repro.core.ooc_attention import ooc_attention
+from repro.core.partitioner import (
+    AttentionPartition,
+    GemmPartition,
+    plan_attention_partition,
+    plan_gemm_partition,
+)
+from repro.core.pipeline import (
+    build_attention_schedule,
+    build_gemm_schedule,
+    build_vendor_schedule,
+    schedule_stats,
+)
+from repro.core.runtime import (
+    HostOocRuntime,
+    MeshOocRuntime,
+    OocRuntime,
+    RuntimeFactory,
+    VmemOocRuntime,
+)
+from repro.core.simulator import (
+    HardwareModel,
+    SimResult,
+    gpu_like,
+    phi_like,
+    simulate,
+    tpu_v5e_ici,
+    tpu_v5e_vmem,
+)
+from repro.core.streams import (
+    Device,
+    Event,
+    Op,
+    OpKind,
+    Schedule,
+    ScheduleError,
+    Stream,
+    StreamFactory,
+    validate_schedule,
+)
+
+__all__ = [
+    "AttentionPartition", "Device", "Event", "GemmPartition",
+    "HardwareModel", "HostOocRuntime", "MeshOocRuntime", "Op", "OpKind",
+    "OocRuntime", "RuntimeFactory", "Schedule", "ScheduleError", "SimResult",
+    "Stream", "StreamFactory", "VmemOocRuntime",
+    "build_attention_schedule", "build_gemm_schedule",
+    "build_vendor_schedule", "gpu_like", "is_in_core", "ooc_attention",
+    "ooc_gemm", "phi_like", "plan_attention_partition", "plan_for_device",
+    "plan_gemm_partition", "schedule_stats", "simulate", "tpu_v5e_ici",
+    "tpu_v5e_vmem", "validate_schedule",
+]

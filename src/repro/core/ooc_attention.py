@@ -1,0 +1,99 @@
+"""Out-of-core attention — the engine's second data-parallel kernel.
+
+Reuses the MMOOC pipeline machinery (claim: the synchronization pattern is
+kernel-agnostic).  The KV cache plays the role of the out-of-core operand;
+queries stay resident; each streamed (K, V) block updates an online-softmax
+carry (m, l, acc) — a different merge operator in the same schedule.
+
+This is the host-driven variant, executing the Schedule op-by-op like
+``HostOocRuntime``.  The jit-compatible in-model variant (lax.scan over KV
+blocks) lives in ``models/layers.py``; the Pallas in-VMEM variant in
+``kernels/flash_attention.py``.  All three agree with ``kernels/ref.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Hashable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partitioner import plan_attention_partition
+from repro.core.pipeline import build_attention_schedule
+from repro.core.streams import OpKind, validate_schedule
+
+
+@jax.jit
+def _attn_block_update(q, k_blk, v_blk, m, l, acc):
+    """One online-softmax step over a KV block.
+
+    q: (H, d)    k_blk/v_blk: (S_b, Hkv, d)    m,l: (H,)    acc: (H, d)
+    GQA: query head h reads kv head h // (H // Hkv).
+    """
+    H, d = q.shape
+    hkv = k_blk.shape[1]
+    group = H // hkv
+    kb = jnp.repeat(k_blk, group, axis=1)          # (S_b, H, d)
+    vb = jnp.repeat(v_blk, group, axis=1)
+    s = jnp.einsum("hd,shd->hs", q, kb) / np.sqrt(d)   # (H, S_b)
+    m_new = jnp.maximum(m, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])                    # (H, S_b)
+    scale = jnp.exp(m - m_new)
+    l_new = l * scale + p.sum(axis=1)
+    acc_new = acc * scale[:, None] + jnp.einsum("hs,shd->hd", p, vb)
+    return m_new, l_new, acc_new
+
+
+def ooc_attention(
+    q,
+    k_cache,
+    v_cache,
+    *,
+    budget_bytes: int,
+    nstreams: int = 2,
+    nbuf: int = 2,
+    validate: bool = False,
+):
+    """Single-query (decode-shaped) attention over an out-of-core KV cache.
+
+    q: (H, d); k_cache/v_cache: (S, Hkv, d) living in host memory.
+    Returns (H, d).
+    """
+    q = jnp.asarray(q)
+    k_cache = np.asarray(k_cache)
+    v_cache = np.asarray(v_cache)
+    S, hkv, d = k_cache.shape
+    H = q.shape[0]
+
+    part = plan_attention_partition(
+        S, hkv, d, budget_bytes,
+        bytes_per_el=np.dtype(k_cache.dtype).itemsize,
+    )
+    sched = build_attention_schedule(part, hkv, d, H,
+                                     nstreams=nstreams, nbuf=nbuf)
+    if validate:
+        validate_schedule(sched)
+
+    bufs: Dict[Tuple[str, Hashable], jax.Array] = {}
+    m = jnp.full((H,), -jnp.inf, dtype=jnp.float32)
+    l = jnp.zeros((H,), dtype=jnp.float32)
+    acc = jnp.zeros((H, d), dtype=jnp.float32)
+
+    for op in sched.ops:
+        pl = op.payload or {}
+        if op.kind == OpKind.H2D:
+            idx = pl["idx"]
+            lo, hi = idx * part.bs, min(S, (idx + 1) * part.bs)
+            src = k_cache if pl["operand"] == "K" else v_cache
+            bufs[(pl["operand"], op.buffers_written[0][1])] = jnp.asarray(
+                src[lo:hi]
+            )
+        elif op.kind == OpKind.COMPUTE:
+            kb = bufs[("K", op.buffers_read[0][1])]
+            vb = bufs[("V", op.buffers_read[1][1])]
+            m, l, acc = _attn_block_update(
+                q.astype(jnp.float32), kb.astype(jnp.float32),
+                vb.astype(jnp.float32), m, l, acc)
+        # D2H R(out): final normalization below
+    return (acc / l[:, None]).astype(q.dtype)

@@ -1,0 +1,201 @@
+"""Block partitioner for out-of-core GEMM — the ``hclMatrixPartitioner`` analogue.
+
+The paper's partitioner splits A (M×K) into ``h`` horizontal slices, B (K×N)
+into ``w`` vertical slices, and C (M×N) into ``h×w`` rectangular blocks such
+that *the data required for updating any two blocks of C in the same column is
+small enough to fit in the accelerator's memory* (libhclooc §III, §V).  Two
+C blocks must fit simultaneously because the double-buffered pipeline holds the
+block being computed and the block being transferred at the same time.
+
+TPU adaptation: the "accelerator memory" is a *tier budget* (VMEM for the
+Pallas backend, a single chip's HBM for host streaming, per-shard HBM for the
+mesh backend), and block edges are aligned to the MXU/VREG tiling
+(lane=128, sublane=8) so that the in-core GEMM hits the systolic array at full
+utilization.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+# TPU tiling constants (fp32/bf16 lane/sublane granularity).
+LANE = 128
+SUBLANE = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmPartition:
+    """A plan for C = alpha * A @ B + beta * C computed in h x w blocks.
+
+    Attributes mirror the paper's notation:
+      h: number of horizontal slices of A (and of C's rows)
+      w: number of vertical slices of B (and of C's cols)
+      bm, bn: block dims of a C block (last row/col blocks may be smaller)
+      M, N, K: problem shape
+      bytes_per_el: element size (the paper fixes double; we support any dtype)
+      budget: memory budget in bytes that the working set must fit
+    """
+
+    M: int
+    N: int
+    K: int
+    h: int
+    w: int
+    bm: int
+    bn: int
+    bytes_per_el: int
+    budget: int
+
+    @property
+    def nblocks(self) -> int:
+        return self.h * self.w
+
+    def working_set_bytes(self) -> int:
+        """Bytes resident on-device for the paper's 2-deep pipeline.
+
+        One A slice (bm x K), one B slice (K x bn), and TWO C blocks
+        (bm x bn each) — the block being computed and the block in flight —
+        plus the incoming next A slice (double buffered).
+        """
+        a = 2 * self.bm * self.K          # current + prefetched A slice
+        b = self.K * self.bn              # one B slice (reused down a column)
+        c = 2 * self.bm * self.bn         # two C blocks (paper's constraint)
+        return (a + b + c) * self.bytes_per_el
+
+    def block_rows(self, i: int) -> Tuple[int, int]:
+        """(row_start, row_size) of block row i, i in [0, h)."""
+        start = i * self.bm
+        return start, min(self.bm, self.M - start)
+
+    def block_cols(self, j: int) -> Tuple[int, int]:
+        start = j * self.bn
+        return start, min(self.bn, self.N - start)
+
+    def blocks(self):
+        """Iterate (i, j, rs, rn, cs, cn) in the paper's column-major order.
+
+        The paper's Fig. 2 loop iterates ``for j in range(w): for i in
+        range(h)`` so that a B slice b_j is transferred once and reused for all
+        h C blocks in its column.
+        """
+        for j in range(self.w):
+            for i in range(self.h):
+                rs, rn = self.block_rows(i)
+                cs, cn = self.block_cols(j)
+                yield i, j, rs, rn, cs, cn
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _align_block(b: int, dim: int, align: int) -> int:
+    """Round block size up to ``align`` without exceeding the padded dim."""
+    b = max(align, _round_up(b, align))
+    return min(b, _round_up(dim, align))
+
+
+def plan_gemm_partition(
+    M: int,
+    N: int,
+    K: int,
+    budget_bytes: int,
+    bytes_per_el: int = 4,
+    align_m: int = SUBLANE,
+    align_n: int = LANE,
+) -> GemmPartition:
+    """Choose (h, w) so the pipeline working set fits ``budget_bytes``.
+
+    Strategy (faithful to the paper, §V): keep K un-split (slices of A are
+    full-K rows, slices of B are full-K columns) and grow h and w until the
+    working set fits.  Prefer fewer, larger blocks (maximize in-core GEMM
+    efficiency) and prefer splitting M before N, because a B slice is reused
+    ``h`` times per column while an A slice is used once — smaller bn raises
+    B-transfer cost linearly, smaller bm only shrinks the compute tile.
+
+    Raises ValueError if even the minimum aligned block does not fit — the
+    paper's implicit requirement that K itself fits (it never splits K; our
+    Pallas backend *does* split K, see kernels/block_matmul.py, which is a
+    beyond-paper extension).
+    """
+    if min(M, N, K) <= 0:
+        raise ValueError(f"bad GEMM shape {(M, N, K)}")
+    if budget_bytes <= 0:
+        raise ValueError("budget must be positive")
+
+    def fits(bm: int, bn: int) -> bool:
+        p = GemmPartition(M, N, K, 0, 0, bm, bn, bytes_per_el, budget_bytes)
+        return p.working_set_bytes() <= budget_bytes
+
+    # Start in-core: one block covering everything.
+    bm = _align_block(M, M, align_m)
+    bn = _align_block(N, N, align_n)
+
+    # Shrink the larger block dim first (balanced splitting keeps the in-core
+    # GEMM tile fat for the MXU); ties prefer splitting M, because a B slice
+    # is reused h times per column while an A slice is used once.
+    min_bm, min_bn = align_m, align_n
+    while not fits(bm, bn):
+        shrink_m = (bm >= bn and bm > min_bm) or bn <= min_bn
+        if shrink_m and bm > min_bm:
+            target = max(min_bm, _round_up(bm // 2, align_m))
+            bm = target if target < bm else bm - align_m
+        elif bn > min_bn:
+            target = max(min_bn, _round_up(bn // 2, align_n))
+            bn = target if target < bn else bn - align_n
+        else:
+            need = GemmPartition(
+                M, N, K, 0, 0, bm, bn, bytes_per_el, budget_bytes
+            ).working_set_bytes()
+            raise ValueError(
+                f"GEMM {(M, N, K)} cannot fit budget {budget_bytes}B: minimum "
+                f"aligned working set is {need}B (K is never split by the "
+                f"paper's partitioner; use the vmem backend for K-splitting)"
+            )
+
+    h = math.ceil(M / bm)
+    w = math.ceil(N / bn)
+    return GemmPartition(M, N, K, h, w, bm, bn, bytes_per_el, budget_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionPartition:
+    """KV-cache block plan for out-of-core attention (beyond-paper).
+
+    The same budget math applied to attention: queries stay resident, the KV
+    cache (S × kv_heads × head_dim, ×2 for K and V) is streamed in ``nblocks``
+    sequence blocks of ``bs`` positions each.
+    """
+
+    S: int
+    bs: int
+    nblocks: int
+    bytes_per_el: int
+    budget: int
+
+
+def plan_attention_partition(
+    seq_len: int,
+    kv_heads: int,
+    head_dim: int,
+    budget_bytes: int,
+    bytes_per_el: int = 2,
+    align_s: int = LANE,
+) -> AttentionPartition:
+    """Pick a KV block length so 2 in-flight (K,V) blocks fit the budget."""
+    if seq_len <= 0:
+        raise ValueError("seq_len must be positive")
+    per_pos = 2 * kv_heads * head_dim * bytes_per_el  # K and V
+    bs = _round_up(seq_len, align_s)
+    while bs > align_s and 2 * bs * per_pos > budget_bytes:
+        bs = max(align_s, _round_up(bs // 2, align_s))
+    if 2 * bs * per_pos > budget_bytes:
+        raise ValueError(
+            f"attention KV block of {align_s} positions "
+            f"({2 * align_s * per_pos}B double-buffered) exceeds budget "
+            f"{budget_bytes}B"
+        )
+    nblocks = math.ceil(seq_len / bs)
+    return AttentionPartition(seq_len, bs, nblocks, bytes_per_el, budget_bytes)

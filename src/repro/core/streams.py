@@ -1,0 +1,229 @@
+"""Unified Device / Stream / Event abstractions — libhclooc's core interface.
+
+The paper unifies CUDA streams+events, Intel offload streams+signals, and
+OpenCL command queues behind ``hclStream``/``hclEvent`` data containers plus an
+``hclRuntime`` that issues async ops onto streams.  On TPU the analogous
+"queues" are the pipeline slots of the double-buffered DMA engine (``vmem``
+backend), the async-dispatch queue (``host`` backend), and the ping-pong
+``collective_permute`` buffers of a SUMMA ring (``mesh`` backend).
+
+These classes carry *schedule structure* (issue order, dependency edges,
+buffer parity).  Execution semantics are supplied by:
+
+  * ``core.simulator`` — a discrete-event hardware model (copy engines ×
+    kernel engine) that turns a schedule into a makespan; used to reproduce
+    the paper's overlap claims (C3, C5) without a PCIe bus to measure.
+  * ``core.runtime`` — real JAX executors where an Event resolves to a data
+    dependency (the consuming op takes the produced array as an operand; value
+    dependence on an SSA array IS the event graph on TPU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Device:
+    """The paper's ``{name, id}`` tuple plus ``hclGetMemSize``.
+
+    ``name`` selects the backend/tier: "VMEM", "HBM", "MESH" (TPU tiers) —
+    the analogues of the paper's "GPU"/"PHI"/"FPGA".
+    """
+
+    name: str
+    id: int
+    mem_bytes: int
+
+    def mem_size(self) -> int:  # hclGetMemSize
+        return self.mem_bytes
+
+
+class OpKind(enum.Enum):
+    H2D = "H2D"          # backing tier -> fast tier (paper: host to device)
+    D2H = "D2H"          # fast tier -> backing tier
+    COMPUTE = "COMPUTE"  # in-core kernel on resident blocks (paper: DGEMM)
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """Named completion marker (``hclEvent``).
+
+    The paper's events are created uninitialised and recorded by the async op
+    they are passed to; here an Event is identified by name and recorded by
+    exactly one Op.
+    """
+
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Op:
+    """One asynchronous command issued to a stream (``hclMemcpyAsync`` /
+    ``hclDgemmAsync`` analogue).
+
+    Attributes:
+      kind: transfer direction or compute.
+      tag: human-readable, e.g. "S(a[3])", "DGEMM[3]", "R(c[3])".
+      stream: stream index the op is enqueued on.
+      waits: events that must be recorded before this op may *start*
+             (``hclWaitEvent`` semantics: blocks the stream, not the host).
+      records: event recorded when this op completes (or None).
+      buffers_read / buffers_written: abstract buffer ids touched — used by
+             the validator to prove the schedule never overwrites live data
+             (the paper's stated purpose for its five event sets).
+      bytes: payload for transfers (drives the simulator's bandwidth model).
+      flops: work for compute ops (drives the simulator's compute model).
+    """
+
+    kind: OpKind
+    tag: str
+    stream: int
+    waits: Tuple[Event, ...] = ()
+    records: Optional[Event] = None
+    buffers_read: Tuple[Hashable, ...] = ()
+    buffers_written: Tuple[Hashable, ...] = ()
+    bytes: int = 0
+    flops: int = 0
+    payload: Optional[dict] = None  # backend-specific (block indices etc.)
+
+
+@dataclasses.dataclass
+class Stream:
+    """An ordered queue of Ops bound to a Device (``hclStream``)."""
+
+    device: Device
+    index: int
+    ops: List[Op] = dataclasses.field(default_factory=list)
+
+    def enqueue(self, op: Op) -> None:
+        assert op.stream == self.index, (op.stream, self.index)
+        self.ops.append(op)
+
+
+class StreamFactory:
+    """``hclStreamFactory``: create N streams for a device."""
+
+    @staticmethod
+    def create(device: Device, n: int) -> List[Stream]:
+        if n < 1:
+            raise ValueError("need at least one stream")
+        return [Stream(device, i) for i in range(n)]
+
+
+@dataclasses.dataclass
+class Schedule:
+    """A complete multi-stream program: the object the paper writes by hand in
+    Fig. 2 and that our ``pipeline.PipelineSpec`` DSL generates."""
+
+    device: Device
+    streams: List[Stream]
+    ops: List[Op] = dataclasses.field(default_factory=list)  # global issue order
+
+    def issue(self, op: Op) -> Op:
+        self.ops.append(op)
+        self.streams[op.stream].enqueue(op)
+        return op
+
+    # -- introspection used by benchmarks ------------------------------------
+    def total_bytes(self, kind: OpKind) -> int:
+        return sum(o.bytes for o in self.ops if o.kind == kind)
+
+    def total_flops(self) -> int:
+        return sum(o.flops for o in self.ops if o.kind == OpKind.COMPUTE)
+
+
+class ScheduleError(AssertionError):
+    pass
+
+
+def validate_schedule(sched: Schedule) -> None:
+    """Prove the event graph is correct — the property the paper's five event
+    sets exist to enforce (§V: "To make sure data stored in device buffers is
+    not overwritten until kernel executions that operate on the data have
+    completed").
+
+    Checks, under *any* legal interleaving (streams advance independently;
+    an op may start only when all its ``waits`` have been recorded):
+
+      1. No deadlock: every op's waited-on events are recordable without
+         cycles (topological order exists).
+      2. Write-after-read safety: an op writing buffer b is ordered (via the
+         event/stream happens-before relation) after every earlier op reading
+         b, and vice versa (read-after-write).
+
+    Raises ScheduleError on violation.
+    """
+    ops = sched.ops
+    n = len(ops)
+    recorder: Dict[str, int] = {}
+    for idx, op in enumerate(ops):
+        if op.records is not None:
+            if op.records.name in recorder:
+                raise ScheduleError(f"event {op.records.name} recorded twice")
+            recorder[op.records.name] = idx
+
+    # happens-before edges: stream program order + wait->record edges.
+    preds: List[List[int]] = [[] for _ in range(n)]
+    last_in_stream: Dict[int, int] = {}
+    for idx, op in enumerate(ops):
+        if op.stream in last_in_stream:
+            preds[idx].append(last_in_stream[op.stream])
+        last_in_stream[op.stream] = idx
+        for ev in op.waits:
+            if ev.name not in recorder:
+                raise ScheduleError(
+                    f"op {op.tag} waits on never-recorded event {ev.name}"
+                )
+            preds[idx].append(recorder[ev.name])
+
+    # topo order / cycle check (1).
+    state = [0] * n  # 0 unvisited, 1 on stack, 2 done
+    order: List[int] = []
+
+    def visit(u: int) -> None:
+        stack = [(u, iter(preds[u]))]
+        state[u] = 1
+        while stack:
+            node, it = stack[-1]
+            advanced = False
+            for v in it:
+                if state[v] == 1:
+                    raise ScheduleError("event graph has a cycle (deadlock)")
+                if state[v] == 0:
+                    state[v] = 1
+                    stack.append((v, iter(preds[v])))
+                    advanced = True
+                    break
+            if not advanced:
+                state[node] = 2
+                order.append(node)
+                stack.pop()
+
+    for u in range(n):
+        if state[u] == 0:
+            visit(u)
+
+    # transitive happens-before via reachability over preds (2).
+    reach = [set() for _ in range(n)]  # reach[i] = ops that happen-before i
+    for u in order:  # preds appear before u in topo order
+        for p in preds[u]:
+            reach[u].add(p)
+            reach[u] |= reach[p]
+
+    def hb(a: int, b: int) -> bool:
+        return a in reach[b]
+
+    for i in range(n):
+        for j in range(i + 1, n):
+            oi, oj = ops[i], ops[j]
+            conflict = (
+                set(oi.buffers_written) & (set(oj.buffers_read) | set(oj.buffers_written))
+            ) or (set(oi.buffers_read) & set(oj.buffers_written))
+            if conflict and not (hb(i, j) or hb(j, i)):
+                raise ScheduleError(
+                    f"unordered conflicting ops on buffers {sorted(map(str, conflict))}: "
+                    f"{oi.tag} (issue {i}) vs {oj.tag} (issue {j})"
+                )

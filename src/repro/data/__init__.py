@@ -1,0 +1,2 @@
+from repro.data.pipeline import MemmapSource, Prefetcher, SyntheticSource
+__all__ = ["MemmapSource", "Prefetcher", "SyntheticSource"]

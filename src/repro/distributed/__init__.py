@@ -1,0 +1,25 @@
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    SERVE_RULES,
+    batch_spec,
+    constrain,
+    logical_to_spec,
+    make_weight_gather,
+    tree_shardings,
+    tree_specs,
+)
+from repro.distributed.hlo_analysis import (
+    CollectiveStats,
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    Roofline,
+    collective_bytes,
+    model_flops_estimate,
+)
+
+__all__ = [
+    "CollectiveStats", "DEFAULT_RULES", "SERVE_RULES", "HBM_BW", "ICI_BW", "PEAK_FLOPS",
+    "Roofline", "batch_spec", "collective_bytes", "constrain",
+    "logical_to_spec", "make_weight_gather", "model_flops_estimate", "tree_shardings", "tree_specs",
+]

@@ -1,0 +1,177 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+``compiled.cost_analysis()`` supplies HLO FLOPs and bytes accessed (per
+device, post-SPMD-partitioning).  Collective traffic is NOT in
+cost_analysis, so we parse the compiled HLO text and sum wire bytes of every
+collective op, weighting by the op's algorithmic transfer factor on a ring:
+
+  all-gather        (n-1)/n * output bytes
+  reduce-scatter    (n-1)/n * input bytes
+  all-reduce        2 (n-1)/n * bytes        (reduce-scatter + all-gather)
+  all-to-all        (n-1)/n * bytes
+  collective-permute 1.0 * bytes
+
+Hardware constants (TPU v5e, per brief): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+VMEM_BYTES = 128 * 2**20
+HBM_BYTES = 16 * 2**30
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _result_bytes(text: str) -> int:
+    """Sum byte sizes of all shapes in an HLO result type string."""
+    return sum(_shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(text))
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    # iota form: replica_groups=[G,n]<=[N] (possibly with dims/transpose)
+    m = re.search(r"replica_groups=\[\s*(\d+)\s*,\s*(\d+)\s*\]", line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0
+    by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def add(self, kind: str, b: float):
+        self.wire_bytes += b
+        self.by_kind[kind] = self.by_kind.get(kind, 0.0) + b
+        self.counts[kind] = self.counts.get(kind, 0) + 1
+
+
+def collective_bytes(hlo_text: str, default_group: int = 2) -> CollectiveStats:
+    """Sum per-device wire bytes of every collective in an HLO module."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match ... = <type> <opname>-start?(...) — skip -done ops (no shape
+        # transfer; the -start carries the payload).
+        m = re.match(r"^[%\w.\-]+\s*=\s*(.+?)\s+([a-z\-]+)(?:-start)?\(", s)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        if op not in _COLLECTIVES:
+            continue
+        if "-done" in s.split("(")[0]:
+            continue
+        n = _group_size(s, default_group)
+        if n <= 1:
+            continue
+        b = _result_bytes(result_type)
+        if op == "all-gather":
+            wire = b * (n - 1) / n
+        elif op == "reduce-scatter":
+            # result is the scattered (small) shape; input = n * result
+            wire = b * (n - 1)
+        elif op == "all-reduce":
+            wire = 2 * b * (n - 1) / n
+        elif op in ("all-to-all", "ragged-all-to-all"):
+            wire = b * (n - 1) / n
+        elif op == "collective-broadcast":
+            wire = b
+        else:  # collective-permute
+            wire = b
+        stats.add(op, wire)
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term roofline for one (arch × shape × mesh) cell."""
+
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device HLO bytes accessed
+    wire_bytes: float            # per-device collective bytes
+    chips: int
+    model_flops: float = 0.0     # 6·N·D (or 6·N_active·D) global
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (chips * HLO flops): remat/redundancy waste."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the step runs at the
+        dominant-term time: t_compute / t_bound."""
+        return self.t_compute / self.t_bound if self.t_bound else 0.0
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "roofline_fraction": self.roofline_fraction,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def model_flops_estimate(n_params_active: float, tokens: float,
+                         training: bool) -> float:
+    """6·N·D for training, 2·N·D for inference forward."""
+    return (6.0 if training else 2.0) * n_params_active * tokens

@@ -1,0 +1,145 @@
+"""Logical-axis sharding rules (MaxText-style) and spec resolution.
+
+Every parameter/cache/activation declares *logical* axis names; this module
+resolves them to mesh ``PartitionSpec``s under the production mesh.  The
+strategy is FSDP×TP (DESIGN.md §6):
+
+  * ``batch``           -> ("pod", "data")  — pure DP across pods
+  * weight "width" dims (vocab / heads / ffn / experts / inner) -> "model"
+  * weight "depth" dim  (embed) -> "data"   — FSDP: 2-D sharded weights,
+    all-gathered per-layer by XLA inside the layer scan
+  * ``cache_seq``       -> "model" *fallback* when kv_heads can't use it
+    (sequence-parallel decode attention; softmax stats reduce over "model")
+
+A dim is sharded only if (a) its size divides the mesh axis product and
+(b) the mesh axis is not already consumed by an earlier (higher-priority)
+dim of the same tensor — avoiding silent GSPMD padding and double-sharding.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (logical name, mesh axes, priority) — lower priority number wins an axis.
+DEFAULT_RULES: Dict[str, Tuple[Tuple[str, ...], int]] = {
+    "batch": (("pod", "data"), 0),
+    "vocab": (("model",), 0),
+    "heads": (("model",), 0),
+    "kv_heads": (("model",), 0),
+    "ffn": (("model",), 0),
+    "experts": (("model",), 0),
+    "inner": (("model",), 0),
+    "inner_heads": (("model",), 0),
+    "embed": (("data",), 1),      # FSDP dim; loses "data" ties to batch
+    "cache_seq": (("model",), 2),  # fallback consumer of "model"
+    "assign": (("model",), 0),     # MoE dispatch assignment dim (sorted)
+    "embed_act": ((), 9),
+    "layer": ((), 9),
+}
+
+
+def _axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def logical_to_spec(
+    logical: Sequence[Optional[str]],
+    shape: Tuple[int, ...],
+    mesh: Mesh,
+    rules: Optional[Dict] = None,
+) -> P:
+    """Resolve one tensor's logical axes to a PartitionSpec."""
+    rules = rules or DEFAULT_RULES
+    assert len(logical) == len(shape), (logical, shape)
+    # priority-ordered assignment
+    order = sorted(
+        range(len(logical)),
+        key=lambda i: rules.get(logical[i], ((), 9))[1] if logical[i] else 9,
+    )
+    used = set()
+    out: list = [None] * len(logical)
+    for i in order:
+        name = logical[i]
+        if name is None or name not in rules:
+            continue
+        axes, _ = rules[name]
+        axes = tuple(a for a in axes if a in mesh.shape)
+        if not axes or any(a in used for a in axes):
+            continue
+        if shape[i] % _axes_size(mesh, axes):
+            continue  # not divisible: replicate rather than pad
+        out[i] = axes if len(axes) > 1 else axes[0]
+        used.update(axes)
+    return P(*out)
+
+
+def tree_specs(axes_tree, shape_tree, mesh: Mesh, rules=None):
+    """Map (logical-axes pytree, ShapeDtypeStruct pytree) -> PartitionSpecs."""
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+    return jax.tree.map(
+        lambda ax, sds: logical_to_spec(ax, sds.shape, mesh, rules),
+        axes_tree, shape_tree, is_leaf=is_axes)
+
+
+def tree_shardings(axes_tree, shape_tree, mesh: Mesh, rules=None):
+    specs = tree_specs(axes_tree, shape_tree, mesh, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, logical: Sequence[Optional[str]], mesh: Mesh, rules=None):
+    """with_sharding_constraint by logical names (activation annotations)."""
+    spec = logical_to_spec(logical, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# Serving rules: weights TP-sharded only ("embed" not sharded over data), so
+# no per-step FSDP gather is needed.  Used when params fit per-chip at
+# TP-only sharding (vLLM-style); huge models (MoE-235B) keep DEFAULT_RULES.
+SERVE_RULES: Dict[str, Tuple[Tuple[str, ...], int]] = {
+    **DEFAULT_RULES, "embed": ((), 9),
+}
+
+
+def make_weight_gather(mesh: Mesh, rules: Optional[Dict] = None,
+                       drop: Tuple[str, ...] = ("data", "pod")):
+    """FSDP gather hook: constrain layer weights to their *model-axis-only*
+    sharding at the point of use.
+
+    Storage stays 2-D sharded (FSDP×TP: the ZeRO memory win), but inside a
+    layer the weights are explicitly all-gathered over the data/pod axes.
+    Without this, GSPMD may instead keep weights sharded on the contracting
+    dim and all-reduce every matmul's *activations* over ``data`` — observed
+    to also unshard the batch axis entirely (EXPERIMENTS.md §Perf iter 1:
+    +100 GiB/device and ~30× collective wire on train_4k).
+
+    Returns gather(tree, axes_tree) -> tree.
+    """
+    base = rules or DEFAULT_RULES
+    gr = {k: (tuple(a for a in v[0] if a not in drop), v[1])
+          for k, v in base.items()}
+
+    def gather(tree, axes_tree):
+        is_axes = lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x)
+
+        def one(ax, w):
+            spec = logical_to_spec(ax, w.shape, mesh, gr)
+            return jax.lax.with_sharding_constraint(
+                w, NamedSharding(mesh, spec))
+
+        return jax.tree.map(one, axes_tree, tree, is_leaf=is_axes)
+
+    return gather
+
+
+def batch_spec(mesh: Mesh, ndim: int, rules=None) -> P:
+    """Spec for an input batch tensor: shard dim 0 on ("pod","data")."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return P(axes if len(axes) > 1 else (axes[0] if axes else None),
+             *([None] * (ndim - 1)))

@@ -1,0 +1,35 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On the CPU container the kernels run in ``interpret=True`` mode (kernel body
+executed in Python — the validation target per the brief); on TPU they lower
+through Mosaic.  ``auto_interpret()`` picks per-platform so model code can
+call these unconditionally.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.block_matmul import block_matmul as _block_matmul
+from repro.kernels.flash_attention import (
+    flash_decode_attention as _flash_decode_attention,
+)
+
+
+def auto_interpret() -> bool:
+    return jax.devices()[0].platform != "tpu"
+
+
+def block_matmul(a, b, c, *, alpha=1.0, beta=0.0, block=(512, 512, 512),
+                 interpret=None):
+    return _block_matmul(
+        a, b, c, alpha=alpha, beta=beta, block=tuple(block),
+        interpret=auto_interpret() if interpret is None else interpret,
+    )
+
+
+def flash_decode_attention(q, k, v, length, *, block_s=512, interpret=None):
+    return _flash_decode_attention(
+        q, k, v, length, block_s=block_s,
+        interpret=auto_interpret() if interpret is None else interpret,
+    )

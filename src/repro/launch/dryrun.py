@@ -1,0 +1,426 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This proves (without hardware) that the distribution config is coherent:
+``jax.jit(step, in_shardings, out_shardings).lower(...).compile()`` must
+succeed on the 16×16 single-pod mesh AND the 2×16×16 multi-pod mesh for every
+supported cell, with ``memory_analysis()`` showing the working set fits a
+16 GB v5e chip.
+
+The two lines above MUST stay the first statements in this file: jax locks
+the device count at first backend init.
+
+Roofline measurement (per cell, single-pod):
+  * PROOF compile — production program (scan-over-layers), full depth:
+    compile success, memory_analysis, per-op collective inventory.
+  * COST compiles — *unrolled* programs (see configs.base.scan_layers: XLA's
+    cost_analysis counts a while body once, not × trip count) at reduced
+    depths L∈{2,4} (zamba2: {2,6,12} to also solve for its shared-attention
+    sites).  Layer stacks are homogeneous, so
+        cost(L) = base + L·per_layer   (+ sites(L)·per_site for zamba2)
+    is exact; we solve for the coefficients and extrapolate FLOPs / HBM
+    bytes / collective wire bytes to the full depth.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+  ... [--microbatch N] [--no-remat] [--block-q N] [--no-master] [--proof-only]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCH_IDS, SHAPES, cell_is_supported, get_arch,
+                           input_specs)
+from repro.distributed import (Roofline, SERVE_RULES, collective_bytes,
+                               constrain, make_weight_gather, tree_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.models import get_model
+from repro.optim import AdamWConfig, adamw
+from repro.training import steps as tsteps
+
+HBM_PER_CHIP = 16 * 2**30
+
+
+def _shard_ec_hook(mesh):
+    """Constraint for MoE (G, E, C, D) dispatch activations."""
+    def hook(t):
+        return constrain(t, ("batch", "experts", None, None), mesh)
+    return hook
+
+
+def _shard_assign_hook(mesh):
+    """Constraint pinning MoE (G, E, C, D) buffers to model-replicated at
+    the dispatch/combine boundaries (see moe_apply §Perf notes).
+
+    History: constraining the (G, A, D) assignment dim to the model axis
+    was REFUTED (572 GiB/device replicate-then-partition); the winning form
+    is an explicit replicated<->expert-sharded transition.
+    """
+    def hook(t):
+        return constrain(t, ("batch",) + (None,) * (t.ndim - 1), mesh)
+    return hook
+
+
+def count_params(shapes_tree) -> int:
+    return int(sum(np.prod(s.shape) for s in jax.tree.leaves(shapes_tree)))
+
+
+def active_params(cfg, shapes_tree) -> int:
+    """MoE: count routed-expert params at top_k/E utilization."""
+    total = count_params(shapes_tree)
+    if not cfg.is_moe:
+        return total
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes_tree)
+    expert = sum(
+        int(np.prod(leaf.shape))
+        for path, leaf in flat
+        if "moe" in jax.tree_util.keystr(path)
+        and "shared" not in jax.tree_util.keystr(path)
+        and "router" not in jax.tree_util.keystr(path))
+    frac = cfg.num_experts_per_tok / cfg.num_experts
+    return int(total - expert + expert * frac)
+
+
+def serialize_memory_analysis(mem) -> Dict:
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _serve_rules_if_fits(param_sds, mesh, budget=int(1.5 * 2**30)):
+    """Serving: TP-only weight sharding when params fit comfortably per chip
+    (no per-step FSDP gather); 2-D sharding otherwise.  The budget leaves
+    HBM headroom for the KV cache (a 6 GiB threshold pushed internvl2-26b
+    decode to 20.3 GiB — re-measured and tightened)."""
+    bytes_total = sum(
+        int(np.prod(s.shape)) * s.dtype.itemsize
+        for s in jax.tree.leaves(param_sds))
+    if bytes_total / mesh.shape["model"] <= budget:
+        return SERVE_RULES
+    return None
+
+
+def _lower_compile(cfg, shape, mesh, use_master, microbatch,
+                   weight_gather=True) -> Dict:
+    """Lower + compile one program variant; return raw per-device costs."""
+    wg = make_weight_gather(mesh) if weight_gather else None
+    if shape.kind != "train":
+        # serving with TP-only weights needs no per-step gather; archs that
+        # stay 2-D-sharded in serving (params too big) keep the FSDP gather
+        probe = jax.eval_shape(
+            lambda: get_model(cfg).init(jax.random.PRNGKey(0)))
+        if _serve_rules_if_fits(probe, mesh) is not None:
+            wg = None
+    # the MoE replicate-boundary (§Perf B3) trades HBM for wire: a win for
+    # train_4k (grads dominate wire) but a memory regression at prefill
+    # token counts (measured 23.8 -> 33.2 GiB) — train-only.
+    rep_hook = _shard_assign_hook(mesh) if shape.kind == "train" else None
+    model = get_model(cfg, shard_ec=_shard_ec_hook(mesh), weight_gather=wg,
+                      shard_assign=rep_hook)
+    opt_cfg = AdamWConfig(use_master=use_master)
+    t0 = time.time()
+
+    batch_sds = input_specs(cfg, shape)
+    pod_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    pod_size = int(np.prod([mesh.shape[a] for a in pod_axes]))
+
+    def bspec(sds):
+        lead = (pod_axes if len(pod_axes) > 1 else pod_axes[0]) \
+            if sds.shape and sds.shape[0] % pod_size == 0 else None
+        return NamedSharding(mesh, P(lead, *([None] * (len(sds.shape) - 1))))
+
+    batch_shardings = jax.tree.map(bspec, batch_sds)
+
+    if shape.kind == "train":
+        state_sds = jax.eval_shape(
+            lambda: tsteps.init_train_state(
+                model, jax.random.PRNGKey(0), opt_cfg))
+        axes = tsteps.train_state_logical_axes(model, use_master)
+        state_shardings = tree_shardings(axes, state_sds, mesh)
+        step_fn = tsteps.build_train_step(model, opt_cfg, microbatch,
+                                          unroll=not cfg.scan_layers)
+        fn = jax.jit(step_fn,
+                     in_shardings=(state_shardings, batch_shardings),
+                     out_shardings=(state_shardings, None),
+                     donate_argnums=(0,))
+        lowered = fn.lower(state_sds, batch_sds)
+        param_sds = state_sds["params"]
+    elif shape.kind == "prefill":
+        param_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+        rules = _serve_rules_if_fits(param_sds, mesh)
+        param_shardings = tree_shardings(
+            model.param_logical_axes(), param_sds, mesh, rules)
+        cache_sds = model.cache_specs(shape.global_batch, shape.seq_len)
+        cache_shardings = tree_shardings(
+            model.cache_logical_axes(), cache_sds, mesh)
+        step_fn = tsteps.build_prefill_step(model, max_len=shape.seq_len)
+        fn = jax.jit(step_fn,
+                     in_shardings=(param_shardings,
+                                   batch_shardings["inputs"]),
+                     out_shardings=(None, cache_shardings))
+        lowered = fn.lower(param_sds, batch_sds["inputs"])
+    else:  # decode
+        param_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+        rules = _serve_rules_if_fits(param_sds, mesh)
+        param_shardings = tree_shardings(
+            model.param_logical_axes(), param_sds, mesh, rules)
+        cache_sds = model.cache_specs(shape.global_batch, shape.seq_len)
+        cache_shardings = tree_shardings(
+            model.cache_logical_axes(), cache_sds, mesh)
+        step_fn = tsteps.build_decode_step(model)
+        fn = jax.jit(step_fn,
+                     in_shardings=(param_shardings, cache_shardings,
+                                   batch_shardings["inputs"]),
+                     out_shardings=(None, cache_shardings),
+                     donate_argnums=(1,))
+        lowered = fn.lower(param_sds, cache_sds, batch_sds["inputs"])
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    cost = compiled.cost_analysis() or {}
+    mem = serialize_memory_analysis(compiled.memory_analysis())
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    del hlo, compiled, lowered
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "wire": float(coll.wire_bytes),
+        "by_kind": dict(coll.by_kind),
+        "counts": dict(coll.counts),
+        "memory": mem,
+        "param_sds": param_sds,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+    }
+
+
+def _cost_depths(cfg):
+    """Depths for the unrolled cost compiles + full-depth reconstructor."""
+    if cfg.family == "hybrid":
+        e = cfg.shared_attn_every
+        depths = (2, e, 2 * e)
+
+        def solve(c2, c6, c12, key):
+            m = (c12[key] - 2 * c6[key] + c2[key]) / 2.0
+            s = c6[key] - c2[key] - (e - 2) * m
+            b = c2[key] - 2 * m
+            sites = cfg.num_layers // e
+            return b + cfg.num_layers * m + sites * s
+        return depths, solve
+
+    depths = (2, 4)
+
+    def solve(c2, c4, key):
+        m = (c4[key] - c2[key]) / 2.0
+        b = c2[key] - 2 * m
+        return b + cfg.num_layers * m
+    return depths, solve
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: Optional[Dict] = None,
+             proof_only: bool = False) -> Dict:
+    """Proof compile + cost extrapolation for one cell."""
+    overrides = overrides or {}
+    cfg = get_arch(arch)
+    cfg_over = {k: v for k, v in overrides.items()
+                if k in cfg.__dataclass_fields__ and v is not None}
+    cfg = cfg.replace(**cfg_over)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "SKIP", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    use_master = overrides.get("use_master", True)
+    microbatch = overrides.get("microbatch") or cfg.microbatch
+    weight_gather = overrides.get("weight_gather", True)
+
+    # ---- PROOF: production scan program, full depth ----
+    proof = _lower_compile(cfg.replace(scan_layers=True), shape, mesh,
+                           use_master, microbatch, weight_gather)
+    mem = proof["memory"]
+    device_bytes = (mem.get("argument_size_in_bytes", 0)
+                    - mem.get("alias_size_in_bytes", 0)
+                    + mem.get("temp_size_in_bytes", 0)
+                    + mem.get("output_size_in_bytes", 0))
+    n_params = count_params(proof["param_sds"])
+    n_active = active_params(cfg, proof["param_sds"])
+
+    art = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "OK", "chips": chips,
+        "n_params": n_params, "n_params_active": n_active,
+        "memory_analysis": mem,
+        "device_hbm_bytes": int(device_bytes),
+        "fits_hbm": bool(device_bytes <= HBM_PER_CHIP),
+        "proof_compile_s": proof["compile_s"],
+        "proof_lower_s": proof["lower_s"],
+        "collective_counts_scan_body": proof["counts"],
+        "overrides": {k: v for k, v in overrides.items() if v is not None},
+    }
+    if proof_only:
+        return art
+
+    # ---- COST: unrolled reduced-depth compiles + extrapolation ----
+    depths, solve = _cost_depths(cfg)
+    cost_cfg = cfg.replace(scan_layers=False)
+    if shape.kind != "decode":
+        cost_cfg = cost_cfg.replace(
+            block_q=max(cfg.block_q, shape.seq_len // 8))
+    points = []
+    for L in depths:
+        points.append(_lower_compile(
+            cost_cfg.replace(num_layers=L), shape, mesh,
+            use_master, microbatch, weight_gather))
+
+    flops = solve(*points, key="flops")
+    hbm_bytes = solve(*points, key="bytes")
+    wire = max(0.0, solve(*points, key="wire"))
+    tokens = (shape.global_batch * shape.seq_len
+              if shape.kind != "decode" else shape.global_batch)
+    training = shape.kind == "train"
+    rl = Roofline(flops=flops, hbm_bytes=hbm_bytes, wire_bytes=wire,
+                  chips=chips,
+                  model_flops=(6.0 if training else 2.0) * n_active * tokens)
+
+    by_kind = {}
+    for k in set().union(*(p["by_kind"] for p in points)):
+        by_kind[k] = int(max(0.0, _solve_kind(points, k, solve)))
+
+    art.update({
+        "tokens": tokens,
+        "flops_per_device": flops,
+        "bytes_per_device": hbm_bytes,
+        "wire_bytes_per_device": wire,
+        "collectives": by_kind,
+        "model_flops": rl.model_flops,
+        "roofline": rl.row(),
+        "cost_points": [
+            {"depth": d, "flops": p["flops"], "bytes": p["bytes"],
+             "wire": p["wire"], "compile_s": p["compile_s"]}
+            for d, p in zip(depths, points)],
+    })
+    return art
+
+
+def _solve_kind(points, kind, solve):
+    pts = [dict(p, **{"k": p["by_kind"].get(kind, 0.0)}) for p in points]
+    return solve(*pts, key="k")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--proof-only", action="store_true",
+                    help="skip the cost extrapolation compiles "
+                         "(multi-pod shardability pass)")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip cells whose artifact JSON already exists")
+    # hillclimb overrides
+    ap.add_argument("--microbatch", type=int)
+    ap.add_argument("--block-q", dest="block_q", type=int)
+    ap.add_argument("--moe-groups", dest="moe_groups", type=int)
+    ap.add_argument("--no-remat", dest="remat", action="store_false",
+                    default=None)
+    ap.add_argument("--no-master", dest="use_master", action="store_false",
+                    default=True)
+    ap.add_argument("--no-weight-gather", dest="weight_gather",
+                    action="store_false", default=True,
+                    help="disable the FSDP point-of-use weight all-gather "
+                         "(the pre-iteration-1 baseline)")
+    args = ap.parse_args()
+
+    overrides = {"microbatch": args.microbatch, "block_q": args.block_q,
+                 "moe_groups": args.moe_groups, "use_master": args.use_master,
+                 "weight_gather": args.weight_gather}
+    if args.remat is False:
+        overrides["remat"] = False
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        cells.append((args.arch, args.shape))
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    for arch, shape in cells:
+        for mp in meshes:
+            # multi-pod pass = shardability proof only; roofline table is
+            # single-pod (per brief)
+            proof_only = args.proof_only or mp
+            name = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+            if args.tag:
+                name += f"__{args.tag}"
+            if args.skip_existing and os.path.exists(
+                    os.path.join(args.out, name + ".json")):
+                print(f"[SKIP-EXISTING] {name}", flush=True)
+                continue
+            t_cell = time.time()
+            try:
+                art = run_cell(arch, shape, mp, overrides,
+                               proof_only=proof_only)
+            except Exception as e:  # a failing cell is a bug — record it
+                art = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+            art["wall_s"] = round(time.time() - t_cell, 1)
+            path = os.path.join(args.out, name + ".json")
+            with open(path, "w") as f:
+                json.dump(art, f, indent=1)
+            status = art["status"]
+            extra = ""
+            if status == "OK":
+                extra = (f" hbm={art['device_hbm_bytes'] / 2**30:.2f}GiB"
+                         f" fits={art['fits_hbm']}"
+                         f" proof={art['proof_compile_s']}s")
+                if "roofline" in art:
+                    r = art["roofline"]
+                    extra += (f" bottleneck={r['bottleneck']}"
+                              f" frac={r['roofline_fraction']:.3f}")
+            elif status == "SKIP":
+                extra = f" ({art['reason']})"
+            else:
+                extra = f" ({art['error'][:200]})"
+            print(f"[{status}] {name}{extra} ({art['wall_s']}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

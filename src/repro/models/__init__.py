@@ -1,0 +1,35 @@
+"""Model zoo registry: family -> model class.
+
+Every model implements the same API (init/forward/prefill/decode/
+init_cache/cache_specs/param_logical_axes/cache_logical_axes) so the
+training/serving steps and the dry-run are arch-agnostic.
+"""
+
+from repro.configs.base import ArchConfig
+from repro.models.mamba2 import Mamba2Model
+from repro.models.rwkv6 import RWKV6Model
+from repro.models.transformer import TransformerModel
+from repro.models.zamba2 import Zamba2Model
+
+_FAMILIES = {
+    "dense": TransformerModel,
+    "moe": TransformerModel,
+    "audio": TransformerModel,   # encoder backbone; stub frontend
+    "vlm": TransformerModel,     # decoder backbone; stub frontend
+    "ssm": None,                 # resolved below per ssm kind
+    "hybrid": Zamba2Model,
+}
+
+
+def get_model(cfg: ArchConfig, shard_ec=None, weight_gather=None,
+              shard_assign=None):
+    if cfg.family == "ssm":
+        cls = Mamba2Model if cfg.ssm_state else RWKV6Model
+    else:
+        cls = _FAMILIES[cfg.family]
+    return cls(cfg, shard_ec=shard_ec, weight_gather=weight_gather,
+               shard_assign=shard_assign)
+
+
+__all__ = ["get_model", "Mamba2Model", "RWKV6Model", "TransformerModel",
+           "Zamba2Model"]

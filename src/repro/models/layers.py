@@ -1,0 +1,280 @@
+"""Shared neural-net layers for the model zoo.
+
+All attention paths are *blocked* (never materialize S×S): training/prefill
+attention streams KV blocks through an online-softmax carry (the OOC pipeline
+pattern of repro.core applied at the model level), and decode attention scans
+the cache in O(S) — which is what makes the ``decode_32k``/``long_500k``
+serving shapes lowerable.
+
+Parameters are plain nested dicts; initializers take explicit PRNG keys.
+Logical sharding axes for every parameter are declared next to its creation
+(see ``*_axes`` functions) and resolved to mesh axes by
+``repro.distributed.sharding``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, jax.Array]
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+def dense_init(key, shape, scale_axis: int = 0, dtype=jnp.float32):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[scale_axis]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def rms_norm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., S, H, d); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., S, 1, d/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention — blocked causal (training / prefill)
+# --------------------------------------------------------------------------
+def blockwise_causal_attention(
+    q, k, v, *, block_q: int = 512, causal: bool = True,
+    unroll: bool = False,
+):
+    """GQA attention without an S×S intermediate.
+
+    q: (B, S, H, d); k, v: (B, S, Hkv, d).  Scans q in blocks; each block
+    computes masked scores against full K (GSPMD shards the S axis of K/V
+    when the cache is sequence-sharded).  Peak intermediate is
+    (B, H, block_q, S).  ``unroll`` replaces the lax.map with a python loop
+    (dry-run cost mode: while bodies are cost-counted once).
+    """
+    B, S, H, d = q.shape
+    hkv = k.shape[2]
+    group = H // hkv
+    scale = 1.0 / np.sqrt(d)
+
+    if S % block_q:
+        block_q = S  # fallback: one block (small/smoke shapes)
+    nq = S // block_q
+
+    kg = jnp.repeat(k, group, axis=2) if group > 1 else k    # (B, S, H, d)
+    vg = jnp.repeat(v, group, axis=2) if group > 1 else v
+    qb = q.reshape(B, nq, block_q, H, d).transpose(1, 0, 2, 3, 4)
+
+    kv_pos = jnp.arange(S)
+
+    def one_block(qi, q_blk):
+        # q_blk: (B, bq, H, d)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q_blk.astype(jnp.float32),
+                       kg.astype(jnp.float32)) * scale
+        if causal:
+            q_pos = qi * block_q + jnp.arange(block_q)
+            mask = kv_pos[None, :] <= q_pos[:, None]         # (bq, S)
+            s = jnp.where(mask[None, None], s, -1e30)
+        m = s.max(axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, vg.astype(jnp.float32))
+        o = o / p.sum(axis=-1).transpose(0, 2, 1)[..., None]
+        return o.astype(q.dtype)
+
+    if unroll:
+        out = jnp.stack([one_block(i, qb[i]) for i in range(nq)], axis=0)
+    else:
+        out = jax.lax.map(lambda args: one_block(*args),
+                          (jnp.arange(nq), qb))               # (nq, B, bq, H, d)
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, d)
+
+
+def decode_attention(q, k_cache, v_cache, length):
+    """One-token GQA attention vs a (possibly sequence-sharded) cache.
+
+    q: (B, H, d); caches: (B, Smax, Hkv, d); length: (B,).
+    O(S) compute/memory — no S×S term, so ``long_500k`` lowers.
+
+    Implementation notes (§Perf iteration on decode_32k): the cache is
+    consumed in its native dtype with fp32 *accumulation*
+    (preferred_element_type) — an explicit ``.astype(f32)`` materializes an
+    S-sized fp32 temp that GSPMD reshards (observed: involuntary full
+    remat + 1 GiB all-gather per layer on the seq-sharded cache); GQA is a
+    grouped einsum, never a materialized ``repeat``.
+    """
+    B, H, d = q.shape
+    hkv = k_cache.shape[2]
+    group = H // hkv
+    scale = 1.0 / np.sqrt(d)
+    qg = (q.astype(jnp.float32) * scale).astype(k_cache.dtype)
+    qg = qg.reshape(B, hkv, group, d)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32)     # (B,Hkv,G,S)
+    mask = jnp.arange(k_cache.shape[1])[None, None, None, :] \
+        < length[:, None, None, None]
+    s = jnp.where(mask, s, -1e30)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    denom = p.sum(axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    o = o / denom[..., None]
+    return o.reshape(B, H, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA attention block (params + apply)
+# --------------------------------------------------------------------------
+def attention_init(key, d_model, n_heads, n_kv, head_dim, qkv_bias,
+                   dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d_model, n_heads * head_dim), 0, dtype),
+        "wk": dense_init(ks[1], (d_model, n_kv * head_dim), 0, dtype),
+        "wv": dense_init(ks[2], (d_model, n_kv * head_dim), 0, dtype),
+        "wo": dense_init(ks[3], (n_heads * head_dim, d_model), 0, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def attention_axes(qkv_bias: bool) -> Params:
+    a = {
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "kv_heads"),
+        "wv": ("embed", "kv_heads"),
+        "wo": ("heads", "embed"),
+    }
+    if qkv_bias:
+        a.update({"bq": ("heads",), "bk": ("kv_heads",),
+                  "bv": ("kv_heads",)})
+    return a
+
+
+def attention_apply(
+    p: Params, x, *, n_heads, n_kv, head_dim, positions,
+    rope_theta, causal=True, block_q=512, unroll=False,
+):
+    """Full-sequence attention (training / prefill).  Returns (out, (k, v))."""
+    B, S, D = x.shape
+    q = (x @ p["wq"] + p.get("bq", 0)).reshape(B, S, n_heads, head_dim)
+    k = (x @ p["wk"] + p.get("bk", 0)).reshape(B, S, n_kv, head_dim)
+    v = (x @ p["wv"] + p.get("bv", 0)).reshape(B, S, n_kv, head_dim)
+    if rope_theta:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    o = blockwise_causal_attention(q, k, v, block_q=block_q, causal=causal,
+                                   unroll=unroll)
+    return o.reshape(B, S, n_heads * head_dim) @ p["wo"], (k, v)
+
+
+def attention_decode_apply(
+    p: Params, x, k_cache, v_cache, length, *,
+    n_heads, n_kv, head_dim, rope_theta,
+):
+    """One-token attention: project, write k/v into the cache at position
+    ``length``, attend over ``length+1`` positions (the new token sees
+    itself).  Returns (out, k_cache, v_cache)."""
+    B, D = x.shape
+    q = (x @ p["wq"] + p.get("bq", 0)).reshape(B, n_heads, head_dim)
+    k = (x @ p["wk"] + p.get("bk", 0)).reshape(B, n_kv, head_dim)
+    v = (x @ p["wv"] + p.get("bv", 0)).reshape(B, n_kv, head_dim)
+    if rope_theta:
+        pos = length.astype(jnp.float32)                    # (B,)
+        q = apply_rope(q[:, None], pos[:, None], rope_theta)[:, 0]
+        k = apply_rope(k[:, None], pos[:, None], rope_theta)[:, 0]
+    k_cache = cache_update(k_cache, k.astype(k_cache.dtype), length)
+    v_cache = cache_update(v_cache, v.astype(v_cache.dtype), length)
+    o = decode_attention(q, k_cache, v_cache, length + 1)
+    return o.reshape(B, n_heads * head_dim) @ p["wo"], k_cache, v_cache
+
+
+# --------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# --------------------------------------------------------------------------
+def mlp_init(key, d_model, d_ff, gated=True, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], (d_model, d_ff), 0, dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), 0, dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), 0, dtype)
+    return p
+
+
+def mlp_axes(gated=True) -> Params:
+    a = {"w_up": ("embed", "ffn"), "w_down": ("ffn", "embed")}
+    if gated:
+        a["w_gate"] = ("embed", "ffn")
+    return a
+
+
+def mlp_apply(p: Params, x, gated=True):
+    up = x @ p["w_up"]
+    if gated:
+        up = jax.nn.silu(x @ p["w_gate"]) * up
+    else:
+        up = jax.nn.gelu(up)
+    return up @ p["w_down"]
+
+
+# --------------------------------------------------------------------------
+# embedding / head
+# --------------------------------------------------------------------------
+def embedding_init(key, vocab, d_model, dtype=jnp.float32) -> jax.Array:
+    return dense_init(key, (vocab, d_model), 1, dtype)
+
+
+def cache_update(cache, new, length, mode: str = "onehot"):
+    """Write ``new`` (B, Hkv, d) into ``cache`` (B, Smax, Hkv, d) at per-row
+    position ``length`` (B,).
+
+    mode="onehot" (default): arithmetic select — GSPMD keeps it local on a
+    seq-sharded cache and fuses the select into a single pass.
+    mode="scatter": batched ``.at[].set`` — hypothesis was O(row) in-place
+    traffic, but measured WORSE (decode_32k Tm 0.048 s vs 0.032 s: GSPMD
+    masks the scatter per shard and the indexed path defeats fusion) — kept
+    as the documented refuted alternative (EXPERIMENTS.md §Perf decode
+    iteration 2).
+    """
+    if mode == "scatter":
+        B = cache.shape[0]
+        return cache.at[jnp.arange(B), length].set(
+            new.astype(cache.dtype), mode="drop")
+    S = cache.shape[1]
+    onehot = (jnp.arange(S)[None] == length[:, None]).astype(cache.dtype)
+    return cache * (1.0 - onehot[..., None, None]) + (
+        onehot[..., None, None] * new[:, None]
+    )

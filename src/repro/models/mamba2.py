@@ -1,0 +1,368 @@
+"""Mamba2 (SSD) blocks — the state-space family (zamba2 backbone, standalone).
+
+The SSD computation is itself a block-streaming pipeline (DESIGN.md §4): the
+sequence is partitioned into chunks; each chunk does dense intra-chunk work
+(MXU-shaped matmuls) while a small recurrent state (B, H, P, N) carries
+between chunks — the paper's partition/stream/accumulate pattern applied to
+time instead of matrix tiles.  A naive per-step scan (``ssd_scan_ref``) is
+the test oracle.
+
+Decode carries (state h, conv tail) in O(1) memory — the reason the
+``long_500k`` shape is runnable for this family.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+Params = Dict[str, jax.Array]
+
+
+# --------------------------------------------------------------------------
+# SSD core
+# --------------------------------------------------------------------------
+def ssd_scan_ref(x, dt, a, B_, C_):
+    """Naive per-step recurrence (oracle).
+
+    x: (B, S, H, P); dt, a: (B, S, H); B_, C_: (B, S, N).
+    h_t = a_t * h_{t-1} + dt_t * x_t ⊗ B_t ;  y_t = C_t · h_t.
+    Returns y: (B, S, H, P), h_final: (B, H, P, N).
+    """
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, at, bt, ct = inp
+        # xt: (B,H,P) dtt/at: (B,H) bt/ct: (B,N)
+        h = at[..., None, None] * h + (
+            (dtt[..., None] * xt)[..., None] * bt[:, None, None, :]
+        )
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          a.transpose(1, 0, 2), B_.transpose(1, 0, 2), C_.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3), h
+
+
+def ssd_chunked(x, dt, a, B_, C_, chunk: int = 256,
+                h0: Optional[jax.Array] = None, unroll: bool = False):
+    """Chunked SSD (Mamba2 algorithm; matrix-form intra-chunk).
+
+    Same contract as ``ssd_scan_ref``.  All decays ≤ 1 by construction so the
+    matrix form is numerically safe (log a ≤ 0).
+    """
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    if S % chunk:
+        chunk = S
+    nc = S // chunk
+
+    def to_chunks(t, extra=()):
+        return t.reshape((Bb, nc, chunk) + t.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, t.ndim + 1)))
+
+    xs = (to_chunks(x), to_chunks(dt), to_chunks(a),
+          to_chunks(B_), to_chunks(C_))
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+
+    def chunk_step(h, inp):
+        xc, dtc, ac, bc, cc = inp          # (B,Lc,H,P) (B,Lc,H) (B,Lc,N)
+        la = jnp.log(jnp.maximum(ac.astype(jnp.float32), 1e-20))
+        ca = jnp.cumsum(la, axis=1)        # (B,Lc,H)
+        # intra-chunk: scores[t,s] = (C_t·B_s) exp(ca[t]-ca[s]) dt_s, s<=t
+        cb = jnp.einsum("bln,bmn->blm", cc.astype(jnp.float32),
+                        bc.astype(jnp.float32))           # (B,Lc,Lc)
+        decay = jnp.exp(ca[:, :, None, :] - ca[:, None, :, :])  # (B,t,s,H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        scores = cb[..., None] * jnp.where(mask[None, ..., None], decay, 0.0)
+        xdt = xc.astype(jnp.float32) * dtc[..., None]     # (B,Lc,H,P)
+        y = jnp.einsum("blsh,bshp->blhp", scores, xdt)
+        # inter-chunk: y += exp(ca[t]) * C_t · h
+        y = y + jnp.exp(ca)[..., None] * jnp.einsum(
+            "bln,bhpn->blhp", cc.astype(jnp.float32), h)
+        # state update: h' = exp(ca[-1]) h + sum_s exp(ca[-1]-ca[s]) dt_s x_s⊗B_s
+        tail = jnp.exp(ca[:, -1:, :] - ca)                # (B,Lc,H)
+        hc = jnp.einsum("blhp,bln->bhpn", xdt * tail[..., None],
+                        bc.astype(jnp.float32))
+        h = jnp.exp(ca[:, -1])[..., None, None] * h + hc
+        return h, y
+
+    if unroll:
+        h, ys_l = h0, []
+        for c in range(nc):
+            h, yc = chunk_step(h, jax.tree.map(lambda t: t[c], xs))
+            ys_l.append(yc)
+        ys = jnp.stack(ys_l, axis=0)
+    else:
+        h, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bb, S, H, P)
+    return y.astype(x.dtype), h
+
+
+# --------------------------------------------------------------------------
+# causal depthwise conv (width W) over (B, S, C)
+# --------------------------------------------------------------------------
+def causal_conv(x, w, tail: Optional[jax.Array] = None):
+    """x: (B, S, C); w: (W, C); tail: (B, W-1, C) state for decode/prefill
+    continuity.  Returns (y (B,S,C), new_tail (B, W-1, C))."""
+    W = w.shape[0]
+    pad = tail if tail is not None else jnp.zeros(
+        (x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                # (B, S+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(W))
+    return y, xp[:, -(W - 1):]
+
+
+# --------------------------------------------------------------------------
+# Mamba2 block
+# --------------------------------------------------------------------------
+def mamba_dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d_inner // P
+    N = cfg.ssm_state
+    return d_inner, H, P, N
+
+
+def mamba_init(key, cfg: ArchConfig) -> Params:
+    d, (di, H, P, N) = cfg.d_model, mamba_dims(cfg)
+    conv_dim = di + 2 * N
+    ks = jax.random.split(key, 4)
+    dt = cfg.pdtype
+    return {
+        "in_proj": L.dense_init(ks[0], (d, 2 * di + 2 * N + H), 0, dt),
+        "conv_w": L.dense_init(ks[1], (cfg.conv_width, conv_dim), 0, dt),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gate_norm": jnp.ones((di,), dt),
+        "out_proj": L.dense_init(ks[2], (di, d), 0, dt),
+    }
+
+
+def mamba_axes(cfg: ArchConfig) -> Params:
+    return {
+        "in_proj": ("embed", "inner"),
+        "conv_w": (None, "inner"),
+        "A_log": (None,),
+        "D_skip": (None,),
+        "dt_bias": (None,),
+        "gate_norm": ("inner",),
+        "out_proj": ("inner", "embed"),
+    }
+
+
+def _mamba_project(p, x, cfg):
+    di, H, P, N = mamba_dims(cfg)
+    z, xbc, dt = jnp.split(x @ p["in_proj"], [di, 2 * di + 2 * N], axis=-1)
+    return z, xbc, dt
+
+
+def mamba_apply(p: Params, x, cfg: ArchConfig, chunk: int = 256):
+    """Full-sequence Mamba2 block.  x: (B, S, D) -> (y, h_final, conv_tail)."""
+    Bb, S, D = x.shape
+    di, H, P, N = mamba_dims(cfg)
+    z, xbc, dt = _mamba_project(p, x, cfg)
+    xbc, tail = causal_conv(xbc, p["conv_w"])
+    xbc = jax.nn.silu(xbc)
+    xs, B_, C_ = jnp.split(xbc, [di, di + N], axis=-1)
+    xs = xs.reshape(Bb, S, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt)                        # (B,S,H)
+    if not cfg.scan_layers:  # cost mode: bound the unrolled chunk count
+        chunk = max(chunk, S // 8 if S >= 8 else S)
+    y, h = ssd_chunked(xs, dt, a, B_, C_, chunk=chunk,
+                       unroll=not cfg.scan_layers)
+    y = y + p["D_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bb, S, di).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], h, tail
+
+
+def mamba_decode(p: Params, x, h, conv_tail, cfg: ArchConfig):
+    """One-token step.  x: (B, D); h: (B,H,P,N); conv_tail: (B,W-1,conv)."""
+    Bb, D = x.shape
+    di, H, P, N = mamba_dims(cfg)
+    z, xbc, dt = _mamba_project(p, x[:, None], cfg)
+    xbc, conv_tail = causal_conv(xbc, p["conv_w"], conv_tail)
+    xbc = jax.nn.silu(xbc[:, 0])                                  # (B, conv)
+    z = z[:, 0]
+    xs, B_, C_ = jnp.split(xbc, [di, di + N], axis=-1)
+    xs = xs.reshape(Bb, H, P)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt)                        # (B,H)
+    h = a[..., None, None] * h + (
+        (dt[..., None] * xs.astype(jnp.float32))[..., None]
+        * B_.astype(jnp.float32)[:, None, None, :])
+    y = jnp.einsum("bhpn,bn->bhp", h, C_.astype(jnp.float32))
+    y = y + p["D_skip"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bb, di).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], h, conv_tail
+
+
+class Mamba2Model:
+    """Pure-SSM decoder (API-compatible with TransformerModel)."""
+
+    def __init__(self, cfg: ArchConfig, shard_ec=None, weight_gather=None,
+                 shard_assign=None):
+        self.cfg = cfg
+        self.weight_gather = weight_gather
+
+    def layer_axes(self) -> Dict:
+        return {"norm": ("embed",), "mamba": mamba_axes(self.cfg)}
+
+
+    def _top(self, params):
+        """Gather non-layer weights (embed / lm_head) over data axes at
+        point-of-use — same FSDP rationale as the per-layer hook."""
+        if self.weight_gather is None:
+            return params
+        keys = [k for k in ("embed", "lm_head") if k in params]
+        axes = self.param_logical_axes()
+        sub = self.weight_gather({k: params[k] for k in keys},
+                                 {k: axes[k] for k in keys})
+        return {**params, **sub}
+
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.num_layers + 2)
+
+        def one(k):
+            k1, k2 = jax.random.split(k)
+            return {"norm": jnp.ones((cfg.d_model,), cfg.pdtype),
+                    "mamba": mamba_init(k1, cfg)}
+
+        layers = jax.vmap(one)(keys[: cfg.num_layers])
+        return {
+            "embed": L.embedding_init(keys[-2], cfg.vocab_size, cfg.d_model,
+                                      cfg.pdtype),
+            "layers": layers,
+            "final_norm": jnp.ones((cfg.d_model,), cfg.pdtype),
+            "lm_head": L.dense_init(keys[-1], (cfg.d_model, cfg.vocab_size),
+                                    0, cfg.pdtype),
+        }
+
+    def param_logical_axes(self) -> Dict:
+        def stack(tree):
+            return jax.tree.map(lambda ax: ("layer",) + tuple(ax), tree,
+                                is_leaf=lambda x: isinstance(x, tuple))
+        return {
+            "embed": ("vocab", "embed"),
+            "layers": stack(self.layer_axes()),
+            "final_norm": ("embed",),
+            "lm_head": ("embed", "vocab"),
+        }
+
+    def _run(self, params, x, collect_state: bool):
+        cfg = self.cfg
+
+        def body(carry, lp):
+            x = carry
+            if self.weight_gather is not None:
+                lp = self.weight_gather(lp, self.layer_axes())
+            y, h, tail = mamba_apply(
+                lp["mamba"], L.rms_norm(x, lp["norm"], cfg.norm_eps), cfg)
+            out = x + y
+            return out, ((h, tail) if collect_state else None)
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        if cfg.scan_layers:
+            return jax.lax.scan(body, x, params["layers"])
+        outs = []
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda p_: p_[i], params["layers"])
+            x, st = body(x, lp)
+            outs.append(st)
+        if not collect_state:
+            return x, None
+        hs = jnp.stack([o[0] for o in outs], axis=0)
+        tails = jnp.stack([o[1] for o in outs], axis=0)
+        return x, (hs, tails)
+
+    def forward(self, params, inputs):
+        cfg = self.cfg
+        params = self._top(params)
+        x = jnp.take(params["embed"], inputs, axis=0).astype(cfg.adtype)
+        x, _ = self._run(params, x, False)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x @ params["lm_head"].astype(x.dtype)
+
+    # ----------------------------------------------------------------- cache
+    def init_cache(self, batch: int, max_len: int) -> Dict:
+        cfg = self.cfg
+        di, H, P, N = mamba_dims(cfg)
+        conv_dim = di + 2 * N
+        Lr = cfg.num_layers
+        return {
+            "h": jnp.zeros((Lr, batch, H, P, N), jnp.float32),
+            "conv": jnp.zeros((Lr, batch, cfg.conv_width - 1, conv_dim),
+                              cfg.adtype),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def cache_logical_axes(self) -> Dict:
+        return {"h": ("layer", "batch", "inner_heads", None, None),
+                "conv": ("layer", "batch", None, "inner"),
+                "len": ("batch",)}
+
+    def cache_specs(self, batch: int, max_len: int) -> Dict:
+        return jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+            jax.eval_shape(lambda: self.init_cache(batch, max_len)))
+
+    def prefill(self, params, inputs, max_len: Optional[int] = None):
+        cfg = self.cfg
+        params = self._top(params)
+        x = jnp.take(params["embed"], inputs, axis=0).astype(cfg.adtype)
+        B, S = inputs.shape
+        x, states = self._run(params, x, True)
+        hs, tails = states
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = x[:, -1] @ params["lm_head"].astype(x.dtype)
+        cache = {"h": hs, "conv": tails,
+                 "len": jnp.full((B,), S, jnp.int32)}
+        return logits, cache
+
+    def decode(self, params, cache, inputs):
+        cfg = self.cfg
+        params = self._top(params)
+        x = jnp.take(params["embed"], inputs, axis=0).astype(cfg.adtype)
+
+        def body(carry, scanned):
+            x = carry
+            lp, h, tail = scanned
+            if self.weight_gather is not None:
+                lp = self.weight_gather(lp, self.layer_axes())
+            y, h, tail = mamba_decode(
+                lp["mamba"], L.rms_norm(x, lp["norm"], cfg.norm_eps),
+                h, tail, cfg)
+            return x + y, (h, tail)
+
+        if cfg.scan_layers:
+            x, (hs, tails) = jax.lax.scan(
+                body, x, (params["layers"], cache["h"], cache["conv"]))
+        else:
+            hs_l, tails_l = [], []
+            for i in range(cfg.num_layers):
+                lp = jax.tree.map(lambda p_: p_[i], params["layers"])
+                x, (h_i, t_i) = body(x, (lp, cache["h"][i], cache["conv"][i]))
+                hs_l.append(h_i)
+                tails_l.append(t_i)
+            hs = jnp.stack(hs_l, axis=0)
+            tails = jnp.stack(tails_l, axis=0)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = x @ params["lm_head"].astype(x.dtype)
+        return logits, {"h": hs, "conv": tails, "len": cache["len"] + 1}

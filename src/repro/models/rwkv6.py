@@ -1,0 +1,388 @@
+"""RWKV-6 "Finch": attention-free time-mix with data-dependent decay.
+
+State per layer is a (B, H, P, P) matrix — O(1) in sequence length, so all
+decode shapes (incl. ``long_500k``) lower with constant memory.  Training
+runs a chunked outer scan (the OOC pattern over time) with a rematerialized
+inner recurrence; the per-step scan is the oracle in tests.
+
+Faithful simplifications (DESIGN.md §5): static token-shift mix coefficients
+(v6 uses low-rank data-dependent ones), single w projection for the decay.
+Head layout: H heads of size P, D = H*P.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+Params = Dict[str, jax.Array]
+
+
+# --------------------------------------------------------------------------
+# wkv recurrence
+# --------------------------------------------------------------------------
+def wkv_scan_ref(r, k, v, w, u, m0=None):
+    """Oracle: per-step.  r,k,v,w: (B, S, H, P); u: (H, P).
+
+    y_t = r_t · (M_{t-1} + diag(u) k_t ⊗ v_t);  M_t = diag(w_t) M_{t-1} + k_t ⊗ v_t
+    Returns y (B, S, H, P), M_final (B, H, P, P).
+    """
+    B, S, H, P = r.shape
+    M = m0 if m0 is not None else jnp.zeros((B, H, P, P), jnp.float32)
+
+    def step(M, inp):
+        rt, kt, vt, wt = inp  # (B,H,P)
+        cur = (u[None] * kt)[..., None] * vt[..., None, :]   # (B,H,P,P)
+        y = jnp.einsum("bhp,bhpq->bhq", rt, M + cur)
+        M = wt[..., None] * M + kt[..., None] * vt[..., None, :]
+        return M, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3).astype(jnp.float32)
+               for t in (r, k, v, w))
+    M, ys = jax.lax.scan(step, M, xs)
+    return ys.transpose(1, 0, 2, 3), M
+
+
+def wkv_associative(r, k, v, w, u, m0: Optional[jax.Array] = None):
+    """Parallel (associative-scan) WKV — the TPU-parallel training path and
+    the dry-run cost path (no while loops, so XLA cost_analysis sees every
+    op).  The recurrence M_t = w_t ⊙ M_{t-1} + k_t ⊗ v_t is a linear scan
+    with associative composition (w2*w1, w2*a1 + a2).
+
+    Memory trades for parallelism: materializes (B, S, H, P, P) states.
+    Validated equal to ``wkv_scan_ref`` in tests.
+    """
+    B, S, H, P = r.shape
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    A = kf[..., None] * vf[..., None, :]          # (B,S,H,P,P)
+    W = wf[..., None]                              # (B,S,H,P,1)
+
+    def combine(l, rgt):
+        wl, al = l
+        wr, ar = rgt
+        return wr * wl, wr * al + ar
+
+    Wc, Ac = jax.lax.associative_scan(combine, (W, A), axis=1)
+    if m0 is not None:
+        M = Ac + Wc * m0[:, None]                 # carry-in
+    else:
+        M = Ac                                     # (B,S,H,P,P) = M_t
+    m_init = (m0 if m0 is not None
+              else jnp.zeros((B, H, P, P), jnp.float32))
+    M_prev = jnp.concatenate([m_init[:, None], M[:, :-1]], axis=1)
+    cur = (u[None, None] * kf)[..., None] * vf[..., None, :]
+    y = jnp.einsum("bshp,bshpq->bshq", rf, M_prev + cur)
+    return y, M[:, -1]
+
+
+def wkv_chunked(r, k, v, w, u, chunk: int = 64,
+                m0: Optional[jax.Array] = None, remat: bool = True):
+    """Outer scan over chunks carrying M; inner per-step recurrence is
+    rematerialized so the backward stores only chunk-boundary states."""
+    B, S, H, P = r.shape
+    if S % chunk:
+        chunk = S
+    nc = S // chunk
+
+    def to_chunks(t):
+        return t.reshape(B, nc, chunk, H, P).transpose(1, 0, 2, 3, 4)
+
+    xs = tuple(to_chunks(t.astype(jnp.float32)) for t in (r, k, v, w))
+    M = m0 if m0 is not None else jnp.zeros((B, H, P, P), jnp.float32)
+
+    def chunk_body(M, inp):
+        rc, kc, vc, wc = inp  # (B, Lc, H, P)
+        yc, Mi = wkv_scan_ref(rc, kc, vc, wc, u, m0=M)
+        return Mi, yc
+
+    if remat:
+        chunk_body = jax.checkpoint(
+            chunk_body, policy=jax.checkpoint_policies.nothing_saveable)
+    M, ys = jax.lax.scan(chunk_body, M, xs)
+    return ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P), M
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+def _shift(x, last):
+    """Token shift: x_{t-1} with ``last`` filling t=0.  x: (B,S,D)."""
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def timemix_init(key, cfg: ArchConfig) -> Params:
+    D = cfg.d_model
+    H = D // cfg.ssm_head_dim
+    P = cfg.ssm_head_dim
+    ks = jax.random.split(key, 6)
+    dt = cfg.pdtype
+    return {
+        "mu": jnp.full((5, D), 0.5, dt),  # r,k,v,g,w shift-mix coefficients
+        "w_r": L.dense_init(ks[0], (D, D), 0, dt),
+        "w_k": L.dense_init(ks[1], (D, D), 0, dt),
+        "w_v": L.dense_init(ks[2], (D, D), 0, dt),
+        "w_g": L.dense_init(ks[3], (D, D), 0, dt),
+        "w_w": L.dense_init(ks[4], (D, D), 0, dt),
+        "w_o": L.dense_init(ks[5], (D, D), 0, dt),
+        "u": jnp.zeros((H, P), jnp.float32),
+        "ln_x": jnp.ones((D,), dt),
+    }
+
+
+def timemix_axes() -> Params:
+    return {"mu": (None, "embed"), "w_r": ("embed", "inner"),
+            "w_k": ("embed", "inner"), "w_v": ("embed", "inner"),
+            "w_g": ("embed", "inner"), "w_w": ("embed", "inner"),
+            "w_o": ("inner", "embed"), "u": ("inner_heads", None),
+            "ln_x": ("inner",)}
+
+
+def _timemix_project(p, x, xprev, H, P):
+    mix = lambda i: x + (xprev - x) * p["mu"][i][None, None]
+    shp = x.shape[:-1] + (H, P)
+    r = (mix(0) @ p["w_r"]).reshape(shp)
+    k = (mix(1) @ p["w_k"]).reshape(shp)
+    v = (mix(2) @ p["w_v"]).reshape(shp)
+    g = jax.nn.silu(mix(3) @ p["w_g"])
+    w = jnp.exp(-jnp.exp(
+        (mix(4) @ p["w_w"]).astype(jnp.float32).reshape(shp) - 3.0))
+    return r, k, v, g, w
+
+
+def timemix_apply(p: Params, x, cfg: ArchConfig, last,
+                  chunk: int = 64, unroll: bool = False):
+    """x: (B, S, D); last: (B, D) shift state.  Returns (y, new_last, M)."""
+    B, S, D = x.shape
+    P = cfg.ssm_head_dim
+    H = D // P
+    xprev = _shift(x, last)
+    r, k, v, g, w = _timemix_project(p, x, xprev, H, P)
+    if unroll:
+        y, M = wkv_associative(r, k, v, w, p["u"])
+    else:
+        y, M = wkv_chunked(r, k, v, w, p["u"], chunk=chunk, remat=cfg.remat)
+    y = L.rms_norm(y.reshape(B, S, D).astype(x.dtype), p["ln_x"],
+                   cfg.norm_eps)
+    return (y * g) @ p["w_o"], x[:, -1], M
+
+
+def timemix_decode(p: Params, x, cfg: ArchConfig, last, M):
+    """x: (B, D).  Returns (y, new_last, M_new)."""
+    B, D = x.shape
+    P = cfg.ssm_head_dim
+    H = D // P
+    r, k, v, g, w = _timemix_project(p, x[:, None], last[:, None], H, P)
+    y, M = wkv_scan_ref(r, k, v, w, p["u"], m0=M)
+    y = L.rms_norm(y[:, 0].reshape(B, D).astype(x.dtype), p["ln_x"],
+                   cfg.norm_eps)
+    return (y * g[:, 0]) @ p["w_o"], x, M
+
+
+def chanmix_init(key, cfg: ArchConfig) -> Params:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = cfg.pdtype
+    return {
+        "mu": jnp.full((2, D), 0.5, dt),
+        "w_k": L.dense_init(ks[0], (D, F), 0, dt),
+        "w_v": L.dense_init(ks[1], (F, D), 0, dt),
+        "w_r": L.dense_init(ks[2], (D, D), 0, dt),
+    }
+
+
+def chanmix_axes() -> Params:
+    return {"mu": (None, "embed"), "w_k": ("embed", "ffn"),
+            "w_v": ("ffn", "embed"), "w_r": ("embed", "inner")}
+
+
+def chanmix_apply(p: Params, x, last):
+    xprev = _shift(x, last) if x.ndim == 3 else last
+    if x.ndim == 2:
+        xk = x + (xprev - x) * p["mu"][0][None]
+        xr = x + (xprev - x) * p["mu"][1][None]
+    else:
+        xk = x + (xprev - x) * p["mu"][0][None, None]
+        xr = x + (xprev - x) * p["mu"][1][None, None]
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    new_last = x[:, -1] if x.ndim == 3 else x
+    return jax.nn.sigmoid(xr @ p["w_r"]) * (k @ p["w_v"]), new_last
+
+
+class RWKV6Model:
+    def __init__(self, cfg: ArchConfig, shard_ec=None, weight_gather=None,
+                 shard_assign=None):
+        self.cfg = cfg
+        self.weight_gather = weight_gather
+
+    def layer_axes(self) -> Dict:
+        return {"ln1": ("embed",), "ln2": ("embed",),
+                "time": timemix_axes(), "chan": chanmix_axes()}
+
+
+    def _top(self, params):
+        """Gather non-layer weights (embed / lm_head) over data axes at
+        point-of-use — same FSDP rationale as the per-layer hook."""
+        if self.weight_gather is None:
+            return params
+        keys = [k for k in ("embed", "lm_head") if k in params]
+        axes = self.param_logical_axes()
+        sub = self.weight_gather({k: params[k] for k in keys},
+                                 {k: axes[k] for k in keys})
+        return {**params, **sub}
+
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.num_layers + 2)
+
+        def one(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "ln1": jnp.ones((cfg.d_model,), cfg.pdtype),
+                "ln2": jnp.ones((cfg.d_model,), cfg.pdtype),
+                "time": timemix_init(k1, cfg),
+                "chan": chanmix_init(k2, cfg),
+            }
+
+        layers = jax.vmap(one)(keys[: cfg.num_layers])
+        return {
+            "embed": L.embedding_init(keys[-2], cfg.vocab_size,
+                                      cfg.d_model, cfg.pdtype),
+            "layers": layers,
+            "final_norm": jnp.ones((cfg.d_model,), cfg.pdtype),
+            "lm_head": L.dense_init(keys[-1], (cfg.d_model, cfg.vocab_size),
+                                    0, cfg.pdtype),
+        }
+
+    def param_logical_axes(self) -> Dict:
+        def stack(tree):
+            return jax.tree.map(lambda ax: ("layer",) + tuple(ax), tree,
+                                is_leaf=lambda x: isinstance(x, tuple))
+        return {"embed": ("vocab", "embed"),
+                "layers": stack(self.layer_axes()),
+                "final_norm": ("embed",), "lm_head": ("embed", "vocab")}
+
+    def _run(self, params, x, collect_state: bool):
+        cfg = self.cfg
+        B = x.shape[0]
+        zeros_last = jnp.zeros((B, cfg.d_model), x.dtype)
+
+        def body(carry, lp):
+            x = carry
+            if self.weight_gather is not None:
+                lp = self.weight_gather(lp, self.layer_axes())
+            y, lt, M = timemix_apply(
+                lp["time"], L.rms_norm(x, lp["ln1"], cfg.norm_eps),
+                cfg, zeros_last, unroll=not cfg.scan_layers)
+            x = x + y
+            y, lc = chanmix_apply(
+                lp["chan"], L.rms_norm(x, lp["ln2"], cfg.norm_eps),
+                zeros_last)
+            x = x + y
+            return x, ((M, lt, lc) if collect_state else None)
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        if cfg.scan_layers:
+            return jax.lax.scan(body, x, params["layers"])
+        outs = []
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda p_: p_[i], params["layers"])
+            x, st = body(x, lp)
+            outs.append(st)
+        if not collect_state:
+            return x, None
+        M = jnp.stack([o[0] for o in outs], axis=0)
+        lt = jnp.stack([o[1] for o in outs], axis=0)
+        lc = jnp.stack([o[2] for o in outs], axis=0)
+        return x, (M, lt, lc)
+
+    def forward(self, params, inputs):
+        cfg = self.cfg
+        params = self._top(params)
+        x = jnp.take(params["embed"], inputs, axis=0).astype(cfg.adtype)
+        x, _ = self._run(params, x, False)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x @ params["lm_head"].astype(x.dtype)
+
+    def init_cache(self, batch: int, max_len: int) -> Dict:
+        cfg = self.cfg
+        D = cfg.d_model
+        P = cfg.ssm_head_dim
+        H = D // P
+        Lr = cfg.num_layers
+        return {
+            "M": jnp.zeros((Lr, batch, H, P, P), jnp.float32),
+            "last_t": jnp.zeros((Lr, batch, D), cfg.adtype),
+            "last_c": jnp.zeros((Lr, batch, D), cfg.adtype),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def cache_logical_axes(self) -> Dict:
+        return {"M": ("layer", "batch", "inner_heads", None, None),
+                "last_t": ("layer", "batch", "embed_act"),
+                "last_c": ("layer", "batch", "embed_act"),
+                "len": ("batch",)}
+
+    def cache_specs(self, batch: int, max_len: int) -> Dict:
+        return jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+            jax.eval_shape(lambda: self.init_cache(batch, max_len)))
+
+    def prefill(self, params, inputs, max_len: Optional[int] = None):
+        cfg = self.cfg
+        params = self._top(params)
+        B, S = inputs.shape
+        x = jnp.take(params["embed"], inputs, axis=0).astype(cfg.adtype)
+        x, states = self._run(params, x, True)
+        M, lt, lc = states
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = x[:, -1] @ params["lm_head"].astype(x.dtype)
+        return logits, {"M": M, "last_t": lt, "last_c": lc,
+                        "len": jnp.full((B,), S, jnp.int32)}
+
+    def decode(self, params, cache, inputs):
+        cfg = self.cfg
+        params = self._top(params)
+        x = jnp.take(params["embed"], inputs, axis=0).astype(cfg.adtype)
+
+        def body(carry, scanned):
+            x = carry
+            lp, M, lt, lc = scanned
+            if self.weight_gather is not None:
+                lp = self.weight_gather(lp, self.layer_axes())
+            y, lt, M = timemix_decode(
+                lp["time"], L.rms_norm(x, lp["ln1"], cfg.norm_eps),
+                cfg, lt, M)
+            x = x + y
+            y, lc = chanmix_apply(
+                lp["chan"], L.rms_norm(x, lp["ln2"], cfg.norm_eps), lc)
+            x = x + y
+            return x, (M, lt.astype(cfg.adtype), lc.astype(cfg.adtype))
+
+        if cfg.scan_layers:
+            x, (M, lt, lc) = jax.lax.scan(
+                body, x, (params["layers"], cache["M"],
+                          cache["last_t"], cache["last_c"]))
+        else:
+            Ms, lts, lcs = [], [], []
+            for i in range(cfg.num_layers):
+                lp = jax.tree.map(lambda p_: p_[i], params["layers"])
+                x, (Mi, lti, lci) = body(
+                    x, (lp, cache["M"][i], cache["last_t"][i],
+                        cache["last_c"][i]))
+                Ms.append(Mi)
+                lts.append(lti)
+                lcs.append(lci)
+            M = jnp.stack(Ms, axis=0)
+            lt = jnp.stack(lts, axis=0)
+            lc = jnp.stack(lcs, axis=0)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = x @ params["lm_head"].astype(x.dtype)
+        return logits, {"M": M, "last_t": lt, "last_c": lc,
+                        "len": cache["len"] + 1}

@@ -1,0 +1,274 @@
+"""Transformer model: dense decoder, MoE decoder, encoder-only — one class.
+
+Covers eight assigned archs (qwen2.5, codeqwen1.5, stablelm, llama3.2,
+internvl2 backbone, hubert encoder, qwen3-moe, deepseek-moe).  Layers are
+weight-stacked and driven by ``lax.scan`` so the HLO (and compile time) is
+one layer regardless of depth; remat wraps the scanned body.
+
+API (shared by all model families in the zoo):
+  init(key) -> params
+  forward(params, inputs) -> logits (B, S, V)
+  init_cache(batch, max_len) -> cache pytree
+  prefill(params, inputs) -> (last_logits, cache)
+  decode(params, cache, inputs) -> (logits, cache)
+  param_logical_axes() / cache_logical_axes() -> pytrees of logical axis names
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as M
+
+
+class TransformerModel:
+    def __init__(self, cfg: ArchConfig, shard_ec=None, weight_gather=None,
+                 shard_assign=None):
+        self.cfg = cfg
+        self.shard_ec = shard_ec  # MoE (G,E,C,D) activation constraint hook
+        self.shard_assign = shard_assign  # MoE (G,A,D) assignment tensors
+        # FSDP hook: gathers a layer's weights over the data/pod axes at
+        # point-of-use (distributed.make_weight_gather)
+        self.weight_gather = weight_gather
+
+    # ------------------------------------------------------------------ init
+    def _layer_init(self, key) -> Dict:
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {
+            "attn_norm": jnp.ones((cfg.d_model,), cfg.pdtype),
+            "mlp_norm": jnp.ones((cfg.d_model,), cfg.pdtype),
+            "attn": L.attention_init(
+                k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.head_dim_, cfg.qkv_bias, cfg.pdtype),
+        }
+        if cfg.is_moe:
+            p["moe"] = M.moe_init(
+                k2, cfg.d_model, cfg.d_ff, cfg.num_experts,
+                cfg.num_shared_experts, cfg.pdtype)
+        else:
+            p["mlp"] = L.mlp_init(k3, cfg.d_model, cfg.d_ff, True, cfg.pdtype)
+        return p
+
+
+    def _top(self, params):
+        """Gather non-layer weights (embed / lm_head) over data axes at
+        point-of-use — same FSDP rationale as the per-layer hook."""
+        if self.weight_gather is None:
+            return params
+        keys = [k for k in ("embed", "lm_head") if k in params]
+        axes = self.param_logical_axes()
+        sub = self.weight_gather({k: params[k] for k in keys},
+                                 {k: axes[k] for k in keys})
+        return {**params, **sub}
+
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.num_layers + 2)
+        layers = jax.vmap(self._layer_init)(keys[: cfg.num_layers])
+        params = {
+            "layers": layers,
+            "final_norm": jnp.ones((cfg.d_model,), cfg.pdtype),
+            "lm_head": L.dense_init(keys[-1], (cfg.d_model, cfg.vocab_size),
+                                    0, cfg.pdtype),
+        }
+        # Embedding table exists unless the arch never consumes tokens
+        # (encoder with stubbed frontend).  A causal stub-frontend arch
+        # (VLM) still decodes text tokens.
+        if not cfg.embedding_input or cfg.causal:
+            params["embed"] = L.embedding_init(
+                keys[-2], cfg.vocab_size, cfg.d_model, cfg.pdtype)
+        return params
+
+    def layer_axes(self) -> Dict:
+        cfg = self.cfg
+        lp = {
+            "attn_norm": ("embed",),
+            "mlp_norm": ("embed",),
+            "attn": L.attention_axes(cfg.qkv_bias),
+        }
+        if cfg.is_moe:
+            lp["moe"] = M.moe_axes(cfg.num_shared_experts)
+        else:
+            lp["mlp"] = L.mlp_axes(True)
+        return lp
+
+    def param_logical_axes(self) -> Dict:
+        cfg = self.cfg
+
+        def stack(tree):  # prepend the scanned "layer" axis
+            return jax.tree.map(lambda ax: ("layer",) + tuple(ax), tree,
+                                is_leaf=lambda x: isinstance(x, tuple))
+
+        axes = {
+            "layers": stack(self.layer_axes()),
+            "final_norm": ("embed",),
+            "lm_head": ("embed", "vocab"),
+        }
+        if not cfg.embedding_input or cfg.causal:
+            axes["embed"] = ("vocab", "embed")
+        return axes
+
+    # ----------------------------------------------------------------- layer
+    def _layer_apply(self, lp, x, positions, collect_kv: bool):
+        cfg = self.cfg
+        h, kv = L.attention_apply(
+            lp["attn"], L.rms_norm(x, lp["attn_norm"], cfg.norm_eps),
+            n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+            head_dim=cfg.head_dim_, positions=positions,
+            rope_theta=cfg.rope_theta, causal=cfg.causal,
+            block_q=cfg.block_q, unroll=not cfg.scan_layers)
+        x = x + h
+        xn = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.is_moe:
+            y = M.moe_apply(lp["moe"], xn, top_k=cfg.num_experts_per_tok,
+                            capacity_factor=cfg.capacity_factor,
+                            groups=cfg.moe_groups, shard_ec=self.shard_ec,
+                            shard_rep=self.shard_assign)
+        else:
+            y = L.mlp_apply(lp["mlp"], xn, gated=True)
+        return x + y, (kv if collect_kv else None)
+
+    def _embed(self, params, inputs):
+        cfg = self.cfg
+        if cfg.embedding_input:
+            return inputs.astype(cfg.adtype)
+        return jnp.take(params["embed"], inputs, axis=0).astype(cfg.adtype)
+
+    # --------------------------------------------------------------- forward
+    def _run_layers(self, params, x, positions, collect_kv: bool = False):
+        cfg = self.cfg
+
+        def body(carry, lp):
+            if self.weight_gather is not None:
+                lp = self.weight_gather(lp, self.layer_axes())
+            out, kv = self._layer_apply(lp, carry, positions, collect_kv)
+            return out, kv
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        if cfg.scan_layers:
+            x, kvs = jax.lax.scan(body, x, params["layers"])
+            return x, kvs
+        # unrolled (dry-run cost mode): identical math, python loop
+        outs = []
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda p: p[i], params["layers"])
+            x, kv = body(x, lp)
+            outs.append(kv)
+        if collect_kv:
+            k = jnp.stack([o[0] for o in outs], axis=0)
+            v = jnp.stack([o[1] for o in outs], axis=0)
+            return x, (k, v)
+        return x, None
+
+    def forward(self, params, inputs):
+        """Training-shape forward: logits for every position (B, S, V)."""
+        cfg = self.cfg
+        params = self._top(params)
+        x = self._embed(params, inputs)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x, _ = self._run_layers(params, x, positions)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x @ params["lm_head"].astype(x.dtype)
+
+    # ----------------------------------------------------------------- cache
+    def init_cache(self, batch: int, max_len: int) -> Dict:
+        cfg = self.cfg
+        shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads,
+                 cfg.head_dim_)
+        return {
+            "k": jnp.zeros(shape, cfg.adtype),
+            "v": jnp.zeros(shape, cfg.adtype),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def cache_logical_axes(self) -> Dict:
+        ax = ("layer", "batch", "cache_seq", "kv_heads", None)
+        return {"k": ax, "v": ax, "len": ("batch",)}
+
+    def cache_specs(self, batch: int, max_len: int) -> Dict:
+        cfg = self.cfg
+        shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads,
+                 cfg.head_dim_)
+        return {
+            "k": jax.ShapeDtypeStruct(shape, cfg.adtype),
+            "v": jax.ShapeDtypeStruct(shape, cfg.adtype),
+            "len": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        }
+
+    # --------------------------------------------------------------- prefill
+    def prefill(self, params, inputs, max_len: Optional[int] = None):
+        """Process a full prompt; return (last-token logits, filled cache)."""
+        cfg = self.cfg
+        params = self._top(params)
+        x = self._embed(params, inputs)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x, kvs = self._run_layers(params, x, positions, collect_kv=True)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = x[:, -1] @ params["lm_head"].astype(x.dtype)
+        k, v = kvs  # each (L, B, S, Hkv, dh)
+        pad = (max_len or S) - S
+        if pad > 0:
+            zeros = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+            k = jnp.pad(k, zeros)
+            v = jnp.pad(v, zeros)
+        cache = {"k": k.astype(cfg.adtype), "v": v.astype(cfg.adtype),
+                 "len": jnp.full((B,), S, jnp.int32)}
+        return logits, cache
+
+    # ---------------------------------------------------------------- decode
+    def decode(self, params, cache, inputs):
+        """One decode step.  inputs: (B,) token ids."""
+        cfg = self.cfg
+        params = self._top(params)
+        x = jnp.take(params["embed"], inputs, axis=0).astype(cfg.adtype)
+        length = cache["len"]                                # (B,)
+
+        def body(carry, scanned):
+            x = carry
+            lp, kc, vc = scanned
+            if self.weight_gather is not None:
+                lp = self.weight_gather(lp, self.layer_axes())
+            xn = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+            # project new token, write into cache, attend over length+1
+            h, kc, vc = L.attention_decode_apply(
+                lp["attn"], xn, kc, vc, length,
+                n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta)
+            x = x + h
+            xn = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+            if cfg.is_moe:
+                y = M.moe_apply(lp["moe"], xn[:, None, :],
+                                top_k=cfg.num_experts_per_tok,
+                                capacity_factor=cfg.capacity_factor,
+                                groups=1, shard_ec=None)[:, 0]
+            else:
+                y = L.mlp_apply(lp["mlp"], xn, gated=True)
+            return x + y, (kc, vc)
+
+        if cfg.scan_layers:
+            x, (k_all, v_all) = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"]))
+        else:
+            ks, vs = [], []
+            for i in range(cfg.num_layers):
+                lp = jax.tree.map(lambda p_: p_[i], params["layers"])
+                x, (kc, vc) = body(x, (lp, cache["k"][i], cache["v"][i]))
+                ks.append(kc)
+                vs.append(vc)
+            k_all = jnp.stack(ks, axis=0)
+            v_all = jnp.stack(vs, axis=0)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = x @ params["lm_head"].astype(x.dtype)
+        new_cache = {"k": k_all, "v": v_all, "len": length + 1}
+        return logits, new_cache

@@ -1,0 +1,347 @@
+"""Zamba2: Mamba2 backbone with *shared* transformer blocks.
+
+Structure [arXiv:2411.15242]: a stack of Mamba2 blocks; every
+``shared_attn_every`` blocks, one of ``num_shared_attn_blocks`` full
+transformer blocks (attention + MLP, weights shared across sites, applied
+round-robin) runs on the hidden state.  Weight sharing keeps the parameter
+count low while giving the SSM backbone periodic global attention.
+
+Faithful simplification (DESIGN.md §5): the shared block consumes the hidden
+state directly (upstream Zamba2 concatenates the original embedding and
+applies a LoRA per site).
+
+Decode state = per-layer Mamba2 (h, conv) + per-*site* KV caches for the
+shared blocks.  The backbone is O(1) in sequence length, so ``long_500k``
+runs with only the (sequence-shardable) shared-site KV caches scaling with S.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba2 as MB
+
+Params = Dict[str, jax.Array]
+
+
+class Zamba2Model:
+    def __init__(self, cfg: ArchConfig, shard_ec=None, weight_gather=None,
+                 shard_assign=None):
+        assert cfg.shared_attn_every > 0
+        self.cfg = cfg
+        self.weight_gather = weight_gather
+        every = cfg.shared_attn_every
+        self.n_sites = cfg.num_layers // every
+        self.main = cfg.num_layers - cfg.num_layers % every  # scanned in segments
+        self.tail = cfg.num_layers - self.main
+
+    # ------------------------------------------------------------------ init
+    def _shared_block_init(self, key) -> Params:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "attn_norm": jnp.ones((cfg.d_model,), cfg.pdtype),
+            "mlp_norm": jnp.ones((cfg.d_model,), cfg.pdtype),
+            "attn": L.attention_init(k1, cfg.d_model, cfg.num_heads,
+                                     cfg.num_kv_heads, cfg.head_dim_,
+                                     cfg.qkv_bias, cfg.pdtype),
+            "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, True, cfg.pdtype),
+        }
+
+
+    def _top(self, params):
+        """Gather non-layer weights (embed / lm_head) over data axes at
+        point-of-use — same FSDP rationale as the per-layer hook."""
+        if self.weight_gather is None:
+            return params
+        keys = [k for k in ("embed", "lm_head") if k in params]
+        axes = self.param_logical_axes()
+        sub = self.weight_gather({k: params[k] for k in keys},
+                                 {k: axes[k] for k in keys})
+        return {**params, **sub}
+
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.num_layers + 4)
+
+        def one(k):
+            return {"norm": jnp.ones((cfg.d_model,), cfg.pdtype),
+                    "mamba": MB.mamba_init(k, cfg)}
+
+        layers = jax.vmap(one)(keys[: cfg.num_layers])
+        shared = jax.vmap(self._shared_block_init)(
+            jax.random.split(keys[-3], cfg.num_shared_attn_blocks))
+        return {
+            "embed": L.embedding_init(keys[-2], cfg.vocab_size, cfg.d_model,
+                                      cfg.pdtype),
+            "layers": layers,
+            "shared": shared,
+            "final_norm": jnp.ones((cfg.d_model,), cfg.pdtype),
+            "lm_head": L.dense_init(keys[-1], (cfg.d_model, cfg.vocab_size),
+                                    0, cfg.pdtype),
+        }
+
+    def layer_axes(self) -> Dict:
+        return {"norm": ("embed",), "mamba": MB.mamba_axes(self.cfg)}
+
+    def shared_axes(self) -> Dict:
+        cfg = self.cfg
+        return {
+            "attn_norm": ("embed",), "mlp_norm": ("embed",),
+            "attn": L.attention_axes(cfg.qkv_bias),
+            "mlp": L.mlp_axes(True),
+        }
+
+    def param_logical_axes(self) -> Dict:
+        def stack(tree):
+            return jax.tree.map(lambda ax: ("layer",) + tuple(ax), tree,
+                                is_leaf=lambda x: isinstance(x, tuple))
+
+        return {
+            "embed": ("vocab", "embed"),
+            "layers": stack(self.layer_axes()),
+            "shared": stack(self.shared_axes()),
+            "final_norm": ("embed",),
+            "lm_head": ("embed", "vocab"),
+        }
+
+    # --------------------------------------------------------------- helpers
+    def _site_params(self, params, site: int):
+        sel = site % self.cfg.num_shared_attn_blocks
+        return jax.tree.map(lambda p: p[sel], params["shared"])
+
+    def _mamba_body(self, collect: bool):
+        cfg = self.cfg
+
+        def body(carry, lp):
+            x = carry
+            if self.weight_gather is not None:
+                lp = self.weight_gather(lp, self.layer_axes())
+            y, h, tail = MB.mamba_apply(
+                lp["mamba"], L.rms_norm(x, lp["norm"], cfg.norm_eps), cfg)
+            return x + y, ((h, tail) if collect else None)
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        return body
+
+    def _segments(self, params):
+        """Split stacked mamba params into (segments, tail)."""
+        cfg = self.cfg
+        every = cfg.shared_attn_every
+        seg = jax.tree.map(lambda p: p[: self.main].reshape(
+            (self.n_sites, every) + p.shape[1:]), params["layers"])
+        tail = jax.tree.map(lambda p: p[self.main:], params["layers"])
+        return seg, tail
+
+    def _shared_apply(self, sp, x, positions):
+        cfg = self.cfg
+        if cfg.remat:
+            # the shared blocks sit OUTSIDE the segment scans — without
+            # their own remat their attention residuals are saved for the
+            # backward (measured: ~30 GiB/chip fixed, microbatch-invariant;
+            # EXPERIMENTS.md §Perf fit sweep)
+            return jax.checkpoint(
+                lambda sp_, x_: self._shared_apply_inner(sp_, x_, positions),
+                policy=jax.checkpoint_policies.nothing_saveable)(sp, x)
+        return self._shared_apply_inner(sp, x, positions)
+
+    def _shared_apply_inner(self, sp, x, positions):
+        cfg = self.cfg
+        if self.weight_gather is not None:
+            sp = self.weight_gather(sp, self.shared_axes())
+        h, kv = L.attention_apply(
+            sp["attn"], L.rms_norm(x, sp["attn_norm"], cfg.norm_eps),
+            n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+            head_dim=cfg.head_dim_, positions=positions,
+            rope_theta=cfg.rope_theta, causal=True, block_q=cfg.block_q,
+            unroll=not cfg.scan_layers)
+        x = x + h
+        x = x + L.mlp_apply(sp["mlp"],
+                            L.rms_norm(x, sp["mlp_norm"], cfg.norm_eps))
+        return x, kv
+
+    # --------------------------------------------------------------- forward
+    def _run(self, params, x, positions, collect: bool):
+        body = self._mamba_body(collect)
+        seg, tail = self._segments(params)
+        states, kvs = [], []
+        def run_stack(x, lp, n):
+            if self.cfg.scan_layers:
+                return jax.lax.scan(body, x, lp)
+            outs = []
+            for i in range(n):
+                x, st = body(x, jax.tree.map(lambda p_: p_[i], lp))
+                outs.append(st)
+            if outs and outs[0] is not None:
+                st = (jnp.stack([o[0] for o in outs], 0),
+                      jnp.stack([o[1] for o in outs], 0))
+            else:
+                st = None
+            return x, st
+
+        every = self.cfg.shared_attn_every
+        for s in range(self.n_sites):
+            lp = jax.tree.map(lambda p: p[s], seg)
+            x, st = run_stack(x, lp, every)
+            states.append(st)
+            x, kv = self._shared_apply(self._site_params(params, s),
+                                       x, positions)
+            kvs.append(kv)
+        if self.tail:
+            x, st = run_stack(x, tail, self.tail)
+            states.append(st)
+        if not collect:
+            return x, None, None
+        hs = jnp.concatenate([s[0] for s in states], axis=0)
+        tails = jnp.concatenate([s[1] for s in states], axis=0)
+        cfg = self.cfg
+        if kvs:
+            k = jnp.stack([kv[0] for kv in kvs], axis=0)  # (sites,B,S,Hkv,dh)
+            v = jnp.stack([kv[1] for kv in kvs], axis=0)
+        else:  # degenerate depth (cost compiles at L < shared_attn_every)
+            B, S = x.shape[0], x.shape[1]
+            k = jnp.zeros((0, B, S, cfg.num_kv_heads, cfg.head_dim_),
+                          cfg.adtype)
+            v = jnp.zeros_like(k)
+        return x, (hs, tails), (k, v)
+
+    def forward(self, params, inputs):
+        cfg = self.cfg
+        params = self._top(params)
+        x = jnp.take(params["embed"], inputs, axis=0).astype(cfg.adtype)
+        B, S = inputs.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x, _, _ = self._run(params, x, positions, False)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x @ params["lm_head"].astype(x.dtype)
+
+    # ----------------------------------------------------------------- cache
+    def init_cache(self, batch: int, max_len: int) -> Dict:
+        cfg = self.cfg
+        di, H, P, N = MB.mamba_dims(cfg)
+        conv_dim = di + 2 * N
+        return {
+            "h": jnp.zeros((cfg.num_layers, batch, H, P, N), jnp.float32),
+            "conv": jnp.zeros((cfg.num_layers, batch, cfg.conv_width - 1,
+                               conv_dim), cfg.adtype),
+            "k": jnp.zeros((self.n_sites, batch, max_len, cfg.num_kv_heads,
+                            cfg.head_dim_), cfg.adtype),
+            "v": jnp.zeros((self.n_sites, batch, max_len, cfg.num_kv_heads,
+                            cfg.head_dim_), cfg.adtype),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def cache_logical_axes(self) -> Dict:
+        kv = ("layer", "batch", "cache_seq", "kv_heads", None)
+        return {"h": ("layer", "batch", "inner_heads", None, None),
+                "conv": ("layer", "batch", None, "inner"),
+                "k": kv, "v": kv, "len": ("batch",)}
+
+    def cache_specs(self, batch: int, max_len: int) -> Dict:
+        return jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+            jax.eval_shape(lambda: self.init_cache(batch, max_len)))
+
+    def prefill(self, params, inputs, max_len: Optional[int] = None):
+        cfg = self.cfg
+        params = self._top(params)
+        B, S = inputs.shape
+        x = jnp.take(params["embed"], inputs, axis=0).astype(cfg.adtype)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x, (hs, tails), (k, v) = self._run(params, x, positions, True)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = x[:, -1] @ params["lm_head"].astype(x.dtype)
+        pad = (max_len or S) - S
+        if pad > 0:
+            zeros = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+            k = jnp.pad(k, zeros)
+            v = jnp.pad(v, zeros)
+        cache = {"h": hs, "conv": tails, "k": k.astype(cfg.adtype),
+                 "v": v.astype(cfg.adtype),
+                 "len": jnp.full((B,), S, jnp.int32)}
+        return logits, cache
+
+    def _decode_stack(self, body, x, lp, hc, cc):
+        if self.cfg.scan_layers:
+            return jax.lax.scan(body, x, (lp, hc, cc))
+        n = jax.tree.leaves(lp)[0].shape[0]
+        hs, cs = [], []
+        for i in range(n):
+            x, (h_i, c_i) = body(
+                x, (jax.tree.map(lambda p_: p_[i], lp), hc[i], cc[i]))
+            hs.append(h_i)
+            cs.append(c_i)
+        return x, (jnp.stack(hs, 0), jnp.stack(cs, 0))
+
+    # ---------------------------------------------------------------- decode
+    def decode(self, params, cache, inputs):
+        cfg = self.cfg
+        params = self._top(params)
+        x = jnp.take(params["embed"], inputs, axis=0).astype(cfg.adtype)
+        length = cache["len"]
+        every = cfg.shared_attn_every
+
+        def body(carry, scanned):
+            x = carry
+            lp, h, tail = scanned
+            if self.weight_gather is not None:
+                lp = self.weight_gather(lp, self.layer_axes())
+            y, h, tail = MB.mamba_decode(
+                lp["mamba"], L.rms_norm(x, lp["norm"], cfg.norm_eps),
+                h, tail, cfg)
+            return x + y, (h, tail)
+
+        seg, tailp = self._segments(params)
+        seg_cache = lambda t, s0, n: jax.tree.map(
+            lambda c: jax.lax.dynamic_slice_in_dim(c, s0, n, axis=0), t)
+        hs_out, tails_out, k_out, v_out = [], [], [], []
+        for s in range(self.n_sites):
+            lp = jax.tree.map(lambda p: p[s], seg)
+            hc = jax.lax.dynamic_slice_in_dim(cache["h"], s * every, every, 0)
+            cc = jax.lax.dynamic_slice_in_dim(cache["conv"], s * every,
+                                              every, 0)
+            x, (h_new, c_new) = self._decode_stack(body, x, lp, hc, cc)
+            hs_out.append(h_new)
+            tails_out.append(c_new)
+            # shared attention site
+            sp = self._site_params(params, s)
+            if self.weight_gather is not None:
+                sp = self.weight_gather(sp, self.shared_axes())
+            xn = L.rms_norm(x, sp["attn_norm"], cfg.norm_eps)
+            hattn, k_site, v_site = L.attention_decode_apply(
+                sp["attn"], xn, cache["k"][s], cache["v"][s], length,
+                n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta)
+            x = x + hattn
+            x = x + L.mlp_apply(sp["mlp"],
+                                L.rms_norm(x, sp["mlp_norm"], cfg.norm_eps))
+            k_out.append(k_site)
+            v_out.append(v_site)
+        if self.tail:
+            hc = cache["h"][self.main:]
+            cc = cache["conv"][self.main:]
+            x, (h_new, c_new) = self._decode_stack(body, x, tailp, hc, cc)
+            hs_out.append(h_new)
+            tails_out.append(c_new)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = x @ params["lm_head"].astype(x.dtype)
+        if k_out:
+            k_new = jnp.stack(k_out, axis=0)
+            v_new = jnp.stack(v_out, axis=0)
+        else:
+            k_new, v_new = cache["k"], cache["v"]
+        new_cache = {
+            "h": jnp.concatenate(hs_out, axis=0),
+            "conv": jnp.concatenate(tails_out, axis=0),
+            "k": k_new,
+            "v": v_new,
+            "len": length + 1,
+        }
+        return logits, new_cache

@@ -1,0 +1,3 @@
+from repro.optim import adamw, compression
+from repro.optim.adamw import AdamWConfig
+__all__ = ["AdamWConfig", "adamw", "compression"]

@@ -1,0 +1,82 @@
+"""int8 gradient compression with error feedback.
+
+Used for the *cross-pod* gradient reduction (the slow DCN/ICI hop of the
+multi-pod mesh): gradients are quantized to int8 with a per-tensor scale
+before the ``pod``-axis psum and dequantized after; the quantization residual
+is carried to the next step (error feedback), which keeps SGD/Adam unbiased
+in the long run (Karimireddy et al., 2019).
+
+Wire cost: 1 byte/element + one f32 scale per tensor, vs 4 (fp32) or 2
+(bf16) — a 2–4× reduction of the inter-pod collective term.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(g32)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(grads, error) -> Tuple[Dict, Dict]:
+    """Error-feedback compression of a gradient pytree.
+
+    Returns (pytree of (q, scale) per leaf, new error pytree).
+    """
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(error)
+    comp, errs = [], []
+    for g, e in zip(flat_g, flat_e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize(corrected)
+        comp.append((q, s))
+        errs.append(corrected - dequantize(q, s))
+    return (jax.tree_util.tree_unflatten(treedef, comp),
+            jax.tree_util.tree_unflatten(treedef, errs))
+
+
+def init_error(params) -> Dict:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_pod_psum(grads, error, axis_name: str = "pod"):
+    """Inside shard_map over the ``pod`` axis: quantize + int16 psum +
+    dequantize with error feedback.  int16 accumulation is exact for up to
+    256 pods of int8 payloads (|sum| <= 127*256 < 2^15).
+
+    A shared scale (pmax of local scales — one scalar psum) makes the
+    decompressed sum exact up to quantization:  sum_i q_i * s = s * psum(q).
+    Returns the *mean* gradient across pods.
+    """
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        s_local = jnp.max(jnp.abs(corrected)) / 127.0 + 1e-12
+        s = jax.lax.pmax(s_local, axis_name)            # shared scale
+        q = jnp.clip(jnp.round(corrected / s), -127, 127).astype(jnp.int8)
+        qsum = jax.lax.psum(q.astype(jnp.int16), axis_name)
+        npods = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        deq = qsum.astype(jnp.float32) * s / npods
+        return deq, corrected - q.astype(jnp.float32) * s
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(error)
+    deq, errs = [], []
+    for g, e in zip(flat_g, flat_e):
+        d, r = one(g, e)
+        deq.append(d)
+        errs.append(r)
+    return (jax.tree_util.tree_unflatten(treedef, deq),
+            jax.tree_util.tree_unflatten(treedef, errs))

@@ -1,0 +1,13 @@
+from repro.training.steps import (
+    build_decode_step,
+    build_forward_step,
+    build_loss_fn,
+    build_prefill_step,
+    build_train_step,
+    cross_entropy,
+    init_train_state,
+    train_state_logical_axes,
+)
+__all__ = ["build_decode_step", "build_forward_step", "build_loss_fn",
+           "build_prefill_step", "build_train_step", "cross_entropy",
+           "init_train_state", "train_state_logical_axes"]

@@ -1,0 +1,124 @@
+"""Arch-agnostic train / serve step builders.
+
+``build_train_step`` assembles: microbatched gradient accumulation
+(lax.scan), fp32 loss with stable logsumexp over the (vocab-sharded) logits,
+global-norm clipping, AdamW with ZeRO-sharded state.  ``build_decode_step`` /
+``build_prefill_step`` wrap the model's serving entry points.  All builders
+are pure functions of (model, config) so the dry-run can lower them against
+ShapeDtypeStructs with explicit in/out shardings.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.optim import adamw
+
+
+def cross_entropy(logits, labels) -> jax.Array:
+    """Mean token CE; fp32 logsumexp.
+
+    One-hot/einsum form, NOT take_along_axis: a gather along the
+    vocab-sharded logits axis makes GSPMD all-gather the full logits
+    (observed: +100 GiB/device temp on train_4k); the einsum contracts the
+    sharded axis locally and psums a scalar instead.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.bfloat16)
+    ll = jnp.einsum("...v,...v->...", logits,
+                    onehot.astype(jnp.float32))
+    return (lse - ll).mean()
+
+
+def build_loss_fn(model) -> Callable:
+    def loss_fn(params, batch):
+        logits = model.forward(params, batch["inputs"])
+        return cross_entropy(logits, batch["labels"])
+    return loss_fn
+
+
+def init_train_state(model, key, opt_cfg: Optional[adamw.AdamWConfig] = None
+                     ) -> Dict:
+    params = model.init(key)
+    use_master = opt_cfg.use_master if opt_cfg else True
+    return {"params": params, "opt": adamw.init(params, use_master)}
+
+
+def train_state_logical_axes(model, use_master: bool = True) -> Dict:
+    pax = model.param_logical_axes()
+    return {"params": pax,
+            "opt": adamw.state_logical_axes(pax, use_master)}
+
+
+def build_train_step(
+    model,
+    opt_cfg: adamw.AdamWConfig,
+    microbatch: int = 1,
+    unroll: bool = False,
+) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    loss_fn = build_loss_fn(model)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatch > 1:
+            def reshape(x):
+                b = x.shape[0]
+                assert b % microbatch == 0, (b, microbatch)
+                return x.reshape((microbatch, b // microbatch) + x.shape[1:])
+            mb = jax.tree.map(reshape, batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc_step(acc, b1):
+                l, g = grad_fn(params, b1)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), acc, g)
+                return acc, l
+
+            if unroll:
+                grads, ls = zeros, []
+                for i in range(microbatch):
+                    grads, li = acc_step(
+                        grads, jax.tree.map(lambda x: x[i], mb))
+                    ls.append(li)
+                losses = jnp.stack(ls)
+            else:
+                grads, losses = jax.lax.scan(acc_step, zeros, mb)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss = losses.mean()
+        else:
+            loss, grads = grad_fn(params, batch)
+
+        new_params, new_opt, metrics = adamw.update(
+            grads, state["opt"], params, opt_cfg)
+        metrics = dict(metrics, loss=loss)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def build_forward_step(model) -> Callable:
+    def forward_step(params, batch):
+        logits = model.forward(params, batch["inputs"])
+        return cross_entropy(logits, batch["labels"])
+    return forward_step
+
+
+def build_prefill_step(model, max_len: Optional[int] = None) -> Callable:
+    def prefill_step(params, inputs):
+        return model.prefill(params, inputs, max_len=max_len)
+    return prefill_step
+
+
+def build_decode_step(model) -> Callable:
+    def decode_step(params, cache, inputs):
+        return model.decode(params, cache, inputs)
+    return decode_step

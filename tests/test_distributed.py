@@ -1,0 +1,104 @@
+"""Sharding-rule resolution + HLO collective parser + roofline math.
+
+Pure-logic tests (no multi-device requirement); the multi-device dry-run
+smoke lives in test_dryrun_smoke.py (subprocess with forced host devices).
+"""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import (Roofline, collective_bytes, logical_to_spec,
+                               tree_specs)
+from repro.distributed.hlo_analysis import _result_bytes
+
+
+class FakeMesh:
+    """Duck-typed mesh with a .shape mapping (enough for spec resolution)."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+
+M2 = FakeMesh({"data": 16, "model": 16})
+M3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_weight_2d_sharding():
+    spec = logical_to_spec(("embed", "heads"), (2048, 4096), M2)
+    assert spec == P("data", "model")
+
+
+def test_non_divisible_replicates():
+    # kv_heads=2 can't shard over model=16 -> replicated
+    spec = logical_to_spec(
+        ("layer", "batch", "cache_seq", "kv_heads", None),
+        (36, 128, 32768, 2, 128), M2)
+    assert spec == P(None, "data", "model", None, None)
+
+
+def test_kv_heads_win_over_cache_seq_when_divisible():
+    spec = logical_to_spec(
+        ("layer", "batch", "cache_seq", "kv_heads", None),
+        (32, 128, 32768, 32, 128), M2)
+    # kv_heads (priority 0) takes "model"; cache_seq falls back to nothing
+    assert spec == P(None, "data", None, "model", None)
+
+
+def test_batch_spans_pod_and_data():
+    spec = logical_to_spec(("batch", None), (256, 7), M3)
+    assert spec == P(("pod", "data"), None)
+
+
+def test_batch_1_replicated():
+    spec = logical_to_spec(("batch", None, None), (1, 5, 5), M3)
+    assert spec == P(None, None, None)
+
+
+def test_no_double_assignment_of_axis():
+    # both want "model": first (priority, then order) wins
+    spec = logical_to_spec(("vocab", "ffn"), (160, 160), M2)
+    assert spec.count("model") <= 1
+
+
+# ------------------------------------------------------------- HLO parsing
+HLO = """
+HloModule test
+ENTRY %main {
+  %x = bf16[16,1024]{1,0} parameter(0)
+  %ar = bf16[16,1024]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[64,1024]{1,0} all-gather(%x), replica_groups=[16,4]<=[64], dimensions={0}
+  %rs = f32[4,1024]{1,0} reduce-scatter(%ag), replica_groups={{0,1,2,3}}, dimensions={0}, to_apply=%add
+  %cp = bf16[8,8]{1,0} collective-permute(%x), source_target_pairs={{0,1},{1,0}}
+  %cpd = bf16[8,8]{1,0} collective-permute-done(%cp)
+}
+"""
+
+
+def test_collective_parser():
+    st = collective_bytes(HLO)
+    b_ar = 16 * 1024 * 2
+    assert st.by_kind["all-reduce"] == pytest.approx(2 * b_ar * 3 / 4)
+    b_ag = 64 * 1024 * 4
+    assert st.by_kind["all-gather"] == pytest.approx(b_ag * 3 / 4)
+    b_rs = 4 * 1024 * 4
+    assert st.by_kind["reduce-scatter"] == pytest.approx(b_rs * 3)
+    assert st.by_kind["collective-permute"] == pytest.approx(8 * 8 * 2)
+    assert st.counts["all-reduce"] == 1
+
+
+def test_result_bytes_tuple():
+    assert _result_bytes("(bf16[2,2], f32[4])") == 2 * 2 * 2 + 4 * 4
+
+
+# ------------------------------------------------------------------ roofline
+def test_roofline_terms_and_bottleneck():
+    rl = Roofline(flops=197e12, hbm_bytes=819e9 * 2, wire_bytes=50e9 * 0.5,
+                  chips=256, model_flops=197e12 * 256 * 0.5)
+    assert rl.t_compute == pytest.approx(1.0)
+    assert rl.t_memory == pytest.approx(2.0)
+    assert rl.t_collective == pytest.approx(0.5)
+    assert rl.bottleneck == "memory"
+    assert rl.roofline_fraction == pytest.approx(0.5)
+    assert rl.useful_flops_ratio == pytest.approx(0.5)

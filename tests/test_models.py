@@ -1,0 +1,208 @@
+"""Per-arch smoke tests (reduced configs) + model-internals correctness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.kernels import ref
+from repro.models import get_model
+from repro.models.layers import blockwise_causal_attention, cache_update
+from repro.models.mamba2 import ssd_chunked, ssd_scan_ref
+from repro.models.rwkv6 import wkv_associative, wkv_chunked, wkv_scan_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------- per-arch smoke
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """Reduced same-family config: one forward + one train step on CPU,
+    asserting output shapes and finiteness (the assignment's smoke)."""
+    from repro.optim import AdamWConfig
+    from repro.training import steps as tsteps
+
+    cfg = get_arch(arch).smoke()
+    model = get_model(cfg)
+    B, S = 2, 32
+    if cfg.embedding_input:
+        inputs = jax.random.normal(KEY, (B, S, cfg.d_model), jnp.float32)
+    else:
+        inputs = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    labels = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+
+    logits = jax.jit(model.forward)(model.init(KEY), inputs)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+    state = tsteps.init_train_state(model, KEY, AdamWConfig())
+    step = jax.jit(tsteps.build_train_step(model, AdamWConfig(lr=1e-3)))
+    state, metrics = step(state, {"inputs": inputs, "labels": labels})
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if get_arch(a).causal])
+def test_arch_smoke_decode(arch):
+    """Prefill + a few decode steps: shapes, finiteness, cache length."""
+    cfg = get_arch(arch).smoke()
+    model = get_model(cfg)
+    B, S = 2, 16
+    if cfg.embedding_input:
+        prompt = jax.random.normal(KEY, (B, S, cfg.d_model), jnp.float32)
+    else:
+        prompt = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    params = model.init(KEY)
+    logits, cache = jax.jit(
+        lambda p, t: model.prefill(p, t, max_len=S + 4))(params, prompt)
+    assert logits.shape == (B, cfg.vocab_size)
+    decode = jax.jit(model.decode)
+    for i in range(3):
+        tok = jnp.argmax(logits, axis=-1)
+        logits, cache = decode(params, cache, tok)
+        assert bool(jnp.isfinite(logits).all())
+    assert int(cache["len"][0]) == S + 3
+
+
+def test_decode_matches_forward_dense():
+    """Teacher-forced decode must reproduce the training forward's logits
+    (the KV-cache path is numerically the same function)."""
+    cfg = get_arch("llama3.2-3b").smoke()
+    model = get_model(cfg)
+    params = model.init(KEY)
+    B, S = 2, 12
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    full = model.forward(params, toks)              # (B, S, V)
+
+    logits_p, cache = model.prefill(params, toks[:, :5], max_len=S)
+    np.testing.assert_allclose(np.asarray(logits_p), np.asarray(full[:, 4]),
+                               rtol=2e-3, atol=2e-3)
+    logits = logits_p
+    for t in range(5, S):
+        logits, cache = model.decode(params, cache, toks[:, t])
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full[:, t]),
+            rtol=2e-3, atol=2e-3)
+
+
+def test_decode_matches_forward_ssm():
+    cfg = get_arch("rwkv6-1.6b").smoke()
+    model = get_model(cfg)
+    params = model.init(KEY)
+    B, S = 1, 10
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    full = model.forward(params, toks)
+    logits, cache = model.prefill(params, toks[:, :4])
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, 3]),
+                               rtol=2e-3, atol=2e-3)
+    for t in range(4, S):
+        logits, cache = model.decode(params, cache, toks[:, t])
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full[:, t]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_decode_matches_forward_mamba():
+    cfg = get_arch("zamba2-1.2b").smoke().replace(shared_attn_every=0)
+    # pure-mamba variant via family ssm
+    cfg = cfg.replace(shared_attn_every=0)
+    from repro.models.mamba2 import Mamba2Model
+    cfg2 = get_arch("zamba2-1.2b").smoke()
+    m = Mamba2Model(cfg2.replace(shared_attn_every=0, family="ssm"))
+    params = m.init(KEY)
+    B, S = 1, 8
+    toks = jax.random.randint(KEY, (B, S), 0, cfg2.vocab_size)
+    full = m.forward(params, toks)
+    logits, cache = m.prefill(params, toks[:, :3])
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, 2]),
+                               rtol=2e-3, atol=2e-3)
+    for t in range(3, S):
+        logits, cache = m.decode(params, cache, toks[:, t])
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full[:, t]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+# ----------------------------------------------------------- layer invariants
+def test_blockwise_attention_equals_reference(rng):
+    B, S, H, hkv, d = 2, 64, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, hkv, d)), jnp.float32)
+    for bq in (16, 32, 64):
+        out = blockwise_causal_attention(q, k, v, block_q=bq)
+        expect = ref.causal_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-4, atol=1e-4)
+    # unrolled == scanned
+    out_u = blockwise_causal_attention(q, k, v, block_q=16, unroll=True)
+    np.testing.assert_allclose(np.asarray(out_u), np.asarray(expect),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_cache_update_writes_at_length(rng):
+    B, S, hkv, d = 3, 16, 2, 8
+    cache = jnp.zeros((B, S, hkv, d), jnp.float32)
+    new = jnp.asarray(rng.standard_normal((B, hkv, d)), jnp.float32)
+    lengths = jnp.asarray([0, 5, 15], jnp.int32)
+    out = cache_update(cache, new, lengths)
+    for b, l in enumerate([0, 5, 15]):
+        np.testing.assert_allclose(np.asarray(out[b, l]),
+                                   np.asarray(new[b]))
+        rest = np.delete(np.asarray(out[b]), l, axis=0)
+        assert (rest == 0).all()
+
+
+# --------------------------------------------------------------- SSM oracles
+def test_ssd_chunked_matches_scan(rng):
+    B, S, H, P, N = 2, 64, 3, 8, 5
+    x = jnp.asarray(rng.standard_normal((B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.1, 1.0, (B, S, H)), jnp.float32)
+    a = jnp.asarray(rng.uniform(0.3, 0.99, (B, S, H)), jnp.float32)
+    B_ = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    C_ = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    y0, h0 = ssd_scan_ref(x, dt, a, B_, C_)
+    for chunk in (8, 16, 64):
+        y1, h1 = ssd_chunked(x, dt, a, B_, C_, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1, np.float32),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(h0), np.asarray(h1),
+                                   rtol=1e-4, atol=1e-4)
+    yu, hu = ssd_chunked(x, dt, a, B_, C_, chunk=16, unroll=True)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(yu, np.float32),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_wkv_variants_match(rng):
+    B, S, H, P = 2, 48, 3, 8
+    mk = lambda: jnp.asarray(rng.standard_normal((B, S, H, P)), jnp.float32)
+    r, k, v = mk(), mk(), mk()
+    w = jnp.asarray(rng.uniform(0.5, 0.99, (B, S, H, P)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((H, P)), jnp.float32)
+    m0 = jnp.asarray(rng.standard_normal((B, H, P, P)), jnp.float32)
+    y0, M0 = wkv_scan_ref(r, k, v, w, u, m0=m0)
+    y1, M1 = wkv_associative(r, k, v, w, u, m0=m0)
+    y2, M2 = wkv_chunked(r, k, v, w, u, chunk=16, m0=m0)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y2),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(M0), np.asarray(M1),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_capacity_drops_are_bounded(rng):
+    """With capacity_factor >= 1 and uniform routing, most tokens route."""
+    from repro.models.moe import moe_apply, moe_init
+    D, F, E, k = 16, 32, 8, 2
+    p = moe_init(KEY, D, F, E)
+    x = jnp.asarray(rng.standard_normal((2, 64, D)), jnp.float32)
+    y = moe_apply(p, x, top_k=k, capacity_factor=2.0)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+    # zero-capacity sanity: with tiny capacity the output shrinks, not NaNs
+    y2 = moe_apply(p, x, top_k=k, capacity_factor=0.1)
+    assert bool(jnp.isfinite(y2).all())
+    assert float(jnp.abs(y2).mean()) <= float(jnp.abs(y).mean()) + 1e-6

@@ -1,0 +1,69 @@
+"""Property tests for the hclMatrixPartitioner analogue."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partitioner import (
+    GemmPartition,
+    plan_attention_partition,
+    plan_gemm_partition,
+)
+
+dims = st.integers(min_value=1, max_value=4096)
+
+
+@given(M=dims, N=dims, K=dims,
+       budget_kb=st.integers(min_value=64, max_value=1 << 16))
+@settings(max_examples=200, deadline=None)
+def test_partition_fits_budget_and_covers(M, N, K, budget_kb):
+    budget = budget_kb * 1024
+    try:
+        part = plan_gemm_partition(M, N, K, budget, bytes_per_el=4)
+    except ValueError:
+        # must only refuse when even the minimal aligned working set is over
+        minimal = GemmPartition(M, N, K, 0, 0, 8, 128, 4, budget)
+        assert minimal.working_set_bytes() > budget
+        return
+    # invariant 1: the paper's 2-deep working set fits
+    assert part.working_set_bytes() <= budget
+    # invariant 2: blocks tile C exactly, in column-major order, no overlap
+    seen = np.zeros((M, N), dtype=bool)
+    last = (-1, -1)
+    for i, j, rs, rn, cs, cn in part.blocks():
+        assert (j, i) > last, "not column-major"
+        last = (j, i)
+        assert rn > 0 and cn > 0
+        assert not seen[rs:rs + rn, cs:cs + cn].any(), "overlap"
+        seen[rs:rs + rn, cs:cs + cn] = True
+    assert seen.all(), "C not covered"
+    # invariant 3: alignment (except boundary blocks)
+    assert part.bm % 8 == 0 and part.bn % 128 == 0
+
+
+@given(S=st.integers(min_value=1, max_value=1 << 20),
+       kv=st.sampled_from([1, 2, 4, 8, 32]),
+       d=st.sampled_from([64, 128]),
+       budget_mb=st.integers(min_value=1, max_value=128))
+@settings(max_examples=100, deadline=None)
+def test_attention_partition(S, kv, d, budget_mb):
+    budget = budget_mb * 2**20
+    per_pos = 2 * kv * d * 2
+    try:
+        part = plan_attention_partition(S, kv, d, budget, bytes_per_el=2)
+    except ValueError:
+        assert 2 * 128 * per_pos > budget
+        return
+    assert 2 * part.bs * per_pos <= budget          # double-buffered fit
+    assert part.nblocks * part.bs >= S              # covers the cache
+    assert part.bs % 128 == 0
+
+
+def test_partition_prefers_balanced_blocks():
+    part = plan_gemm_partition(4096, 4096, 1024, 32 * 2**20, 4)
+    assert max(part.bm, part.bn) <= 8 * max(128, min(part.bm, part.bn))
+
+
+def test_in_core_single_block():
+    part = plan_gemm_partition(256, 256, 256, 1 << 30, 4)
+    assert part.nblocks == 1

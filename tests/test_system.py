@@ -1,0 +1,88 @@
+"""End-to-end system behaviour: the paper's claims as executable assertions."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    build_gemm_schedule,
+    build_vendor_schedule,
+    gpu_like,
+    ooc_gemm,
+    phi_like,
+    plan_gemm_partition,
+    simulate,
+    tpu_v5e_vmem,
+)
+
+
+def _part(M=8192, N=8192, K=8192, frac=6):
+    full = (M * K + K * N + M * N) * 8
+    return plan_gemm_partition(M, N, K, full // frac, 8)
+
+
+def test_claim_c2_zero_loss_at_ooc_transition():
+    """Claim C2: crossing the in-core -> out-of-core boundary loses ~0%
+    effective FLOP/s under the overlapped pipeline (simulated on the
+    GPU-like engine model the paper measured on)."""
+    hw = gpu_like()
+    K = 4096
+
+    def gflops(N, budget):
+        part = plan_gemm_partition(N, N, K, budget, 8)
+        res = simulate(build_gemm_schedule(part, 2, 2), hw)
+        return res.effective_flops
+
+    budget = (3 * 4096 * 4096) * 8 * 3  # fits 4k, not 8k
+    in_core = gflops(4096, budget)
+    out_core = gflops(8192, budget)
+    assert out_core >= 0.9 * in_core
+
+
+def test_claim_c3_beats_vendor_schedule():
+    """Claim C3: >= 2.3x over the CUBLAS-XT-style non-overlapping,
+    B-resending schedule."""
+    part = _part()
+    hw = gpu_like()
+    t_lib = simulate(build_gemm_schedule(part, 2, 2), hw).makespan
+    t_vendor = simulate(build_vendor_schedule(part), hw).makespan
+    assert t_vendor / t_lib >= 2.3
+
+
+def test_claim_c5_overlap_is_hardware_dependent():
+    """Claim C5: two streams win on GPU-like engines, one stream wins on
+    Phi-like engines."""
+    part = _part(8192, 8192, 8192, 6)
+    gpu = gpu_like()
+    t_gpu_2 = simulate(build_gemm_schedule(part, 2, 2), gpu).makespan
+    t_gpu_1 = simulate(build_gemm_schedule(part, 1, 1), gpu).makespan
+    assert t_gpu_2 < t_gpu_1
+    t_phi_1 = simulate(build_gemm_schedule(part, 1, 2),
+                       phi_like(nstreams=1)).makespan
+    t_phi_2 = simulate(build_gemm_schedule(part, 2, 2),
+                       phi_like(nstreams=2)).makespan
+    assert t_phi_1 < t_phi_2
+    # magnitude matches the paper: 667 vs 725 GFLOPs ~ 0.92
+    assert 0.85 < t_phi_1 / t_phi_2 < 0.99
+
+
+def test_tpu_vmem_tier_hides_transfers():
+    """The TPU adaptation: at 512-blocks the VMEM pipeline is compute-bound
+    (DMA fully hidden behind the MXU) — the property the Pallas kernel's
+    double buffering provides."""
+    part = plan_gemm_partition(4096, 4096, 4096, 6 * 2**20, 2)
+    res = simulate(build_gemm_schedule(part, 2, 2), tpu_v5e_vmem())
+    assert res.utilization("exec") > 0.85
+
+
+def test_ooc_equals_incore_numerics(rng):
+    """OOC execution is bit-compatible with one-shot DGEMM up to fp32
+    accumulation order."""
+    M = N = K = 256
+    A = rng.standard_normal((M, K)).astype(np.float32)
+    B = rng.standard_normal((K, N)).astype(np.float32)
+    C = np.zeros((M, N), np.float32)
+    big = ooc_gemm(A, B, C, 1.0, 0.0, budget_bytes=1 << 30, backend="host")
+    small = ooc_gemm(A, B, C, 1.0, 0.0,
+                     budget_bytes=(A.nbytes + B.nbytes + C.nbytes) // 4,
+                     backend="host")
+    np.testing.assert_allclose(big, small, rtol=1e-4, atol=1e-4)
