@@ -4,7 +4,10 @@ Counts non-blank, non-comment, non-docstring lines of:
   numerator   — examples/mmooc_via_api.py ``mmooc()`` (unified API), and the
                 paper-Fig.2-equivalent driver in repro.core.oocgemm.
   denominator — the three hand-written backend implementations in
-                benchmarks/direct_impls.py (host / vmem / mesh tiers).
+                benchmarks/direct_impls.py (host / vmem / mesh tiers); the
+                host one hand-writes partitioning + the op list but executes
+                on the shared ScheduleExecutor, so the count measures the
+                planning/sync code the API saves, not interpreter LOC.
 """
 
 from __future__ import annotations

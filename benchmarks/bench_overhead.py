@@ -2,9 +2,12 @@
 
 Paper: libhclooc loses <= 10 % (K40c) / 4 % (P100) / 8 % (Phi) against the
 hand-optimized accelerator-specific implementations.  Here: wall-clock of
-``ooc_gemm`` (schedule builder + validator + runtime dispatch + hcl facade)
-vs. the hand-rolled direct implementations of benchmarks/direct_impls.py,
-same partition and dtype, on CPU.
+``ooc_gemm`` (spec compilation + schedule build + runtime dispatch + hcl
+facade) vs. (a) a pre-built schedule on the same executor (the pure
+planning-layer overhead) and (b) the hand-rolled host implementation of
+benchmarks/direct_impls.py — which hand-derives its partition and op list
+but shares the engine's ScheduleExecutor, so (b) isolates the planning
+abstraction, not interpreter duplication.  Same partition and dtype, on CPU.
 """
 
 from __future__ import annotations

@@ -1,0 +1,49 @@
+"""Guard: ``validate_schedule`` stays linear-ish on large block grids.
+
+The validator proves the full happens-before relation (the paper's five event
+sets do their job under ANY legal interleaving).  A naive transitive-
+reachability check is O(n^2) in ops and melts on production-scale grids; the
+frontier/vector-clock implementation in ``core/streams.py`` must validate a
+64x64-block GEMM schedule (~20k ops) in seconds.  This bench both reports the
+rate and hard-fails if validation regresses past ``BUDGET_S``.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import build_gemm_schedule, validate_schedule
+from repro.core.partitioner import GemmPartition
+
+# 64x64-block grid, the ISSUE's sizing: far beyond anything tests touch.
+BUDGET_S = 10.0
+
+
+def run():
+    rows = []
+    for h, w in ((16, 16), (32, 32), (64, 64)):
+        part = GemmPartition(M=h * 128, N=w * 128, K=256, h=h, w=w,
+                             bm=128, bn=128, bytes_per_el=4,
+                             budget=64 * 2**20)
+        sched = build_gemm_schedule(part, nstreams=2, nbuf=2)
+        t0 = time.perf_counter()
+        validate_schedule(sched)
+        dt = time.perf_counter() - t0
+        n = len(sched.ops)
+        rows.append({
+            "name": f"validate_{h}x{w}",
+            "us_per_call": dt * 1e6,
+            "derived": f"{n} ops in {dt*1e3:.1f}ms "
+                       f"({n/max(dt,1e-12)/1e3:.0f}k ops/s)",
+        })
+        if h == 64 and dt > BUDGET_S:
+            raise AssertionError(
+                f"validate_schedule took {dt:.1f}s on a {h}x{w} grid "
+                f"({n} ops) — budget is {BUDGET_S}s; the O(n^2) check is back"
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")

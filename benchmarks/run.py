@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV:
                                  stream-width vs hardware; Fig. 5a/5b/5c)
   bench_loc         — claim C4  (75 % LOC reduction)
   bench_roofline    — §Roofline table from the dry-run artifacts
+  bench_validate    — validate_schedule scaling guard (linear-ish)
 """
 
 from __future__ import annotations
@@ -18,12 +19,12 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_loc, bench_overhead, bench_pipeline,
-                            bench_roofline, bench_transition)
+                            bench_roofline, bench_transition, bench_validate)
 
     print("name,us_per_call,derived")
     failures = 0
     for mod in (bench_overhead, bench_transition, bench_pipeline,
-                bench_loc, bench_roofline):
+                bench_loc, bench_roofline, bench_validate):
         try:
             for row in mod.run():
                 derived = str(row["derived"]).replace(",", ";")

@@ -1,0 +1,48 @@
+"""Version-compat shims for the jax baked into the container.
+
+The engine targets current jax APIs but must degrade gracefully on the older
+pinned toolchain (no new installs in CI): ``jax.sharding.AxisType`` and the
+``axis_types=`` Mesh kwarg landed after 0.4.37, and Pallas renamed
+``TPUMemorySpace`` to ``MemorySpace``.  Gate both behind one module so kernel
+and launch code stays current-API-shaped.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:
+    from jax.sharding import AxisType  # noqa: F401  (jax >= 0.5)
+
+    HAVE_AXIS_TYPE = True
+except ImportError:
+    AxisType = None
+    HAVE_AXIS_TYPE = False
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the kwarg exists.
+
+    Older jax's Mesh has no tuple ``axis_types``; Auto is its only behavior,
+    so dropping the kwarg is semantics-preserving.
+    """
+    if HAVE_AXIS_TYPE:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def tpu_memory_space():
+    """Pallas TPU memory-space enum under either of its names."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    ms = getattr(pltpu, "MemorySpace", None)
+    return ms if ms is not None else pltpu.TPUMemorySpace
+
+
+def tpu_compiler_params():
+    """Pallas TPU compiler-params dataclass under either of its names."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cp = getattr(pltpu, "CompilerParams", None)
+    return cp if cp is not None else pltpu.TPUCompilerParams

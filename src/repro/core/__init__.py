@@ -2,14 +2,16 @@
 
 Public surface:
   * plan_gemm_partition / plan_attention_partition  (hclMatrixPartitioner)
-  * build_gemm_schedule / build_attention_schedule / build_vendor_schedule
+  * PipelineSpec / compile_pipeline + the kernel specs (gemm / attention /
+    syrk / vendor) and their build_*_schedule wrappers
   * validate_schedule, simulate, hardware models
-  * ooc_gemm / ooc_attention                        (MMOOC and friends)
+  * ooc_gemm / ooc_syrk / ooc_attention              (MMOOC and friends)
+  * ScheduleExecutor / register_op_handler           (the one interpreter)
   * HostOocRuntime / VmemOocRuntime / MeshOocRuntime (hclRuntime hierarchy)
   * api: hcl-prefixed facade for paper-parity code
 """
 
-from repro.core.oocgemm import is_in_core, ooc_gemm, plan_for_device
+from repro.core.oocgemm import is_in_core, ooc_gemm, ooc_syrk, plan_for_device
 from repro.core.ooc_attention import ooc_attention
 from repro.core.partitioner import (
     AttentionPartition,
@@ -18,17 +20,30 @@ from repro.core.partitioner import (
     plan_gemm_partition,
 )
 from repro.core.pipeline import (
+    ComputeStage,
+    PipelineSpec,
+    StreamedOperand,
+    WriteBack,
+    attention_pipeline_spec,
     build_attention_schedule,
     build_gemm_schedule,
+    build_syrk_schedule,
     build_vendor_schedule,
+    compile_pipeline,
+    gemm_pipeline_spec,
     schedule_stats,
+    syrk_pipeline_spec,
+    vendor_pipeline_spec,
 )
 from repro.core.runtime import (
+    ExecState,
     HostOocRuntime,
     MeshOocRuntime,
     OocRuntime,
     RuntimeFactory,
+    ScheduleExecutor,
     VmemOocRuntime,
+    register_op_handler,
 )
 from repro.core.simulator import (
     HardwareModel,
@@ -40,25 +55,31 @@ from repro.core.simulator import (
     tpu_v5e_vmem,
 )
 from repro.core.streams import (
+    BlockRef,
     Device,
     Event,
     Op,
     OpKind,
     Schedule,
     ScheduleError,
+    SliceRef,
     Stream,
     StreamFactory,
     validate_schedule,
 )
 
 __all__ = [
-    "AttentionPartition", "Device", "Event", "GemmPartition",
-    "HardwareModel", "HostOocRuntime", "MeshOocRuntime", "Op", "OpKind",
-    "OocRuntime", "RuntimeFactory", "Schedule", "ScheduleError", "SimResult",
-    "Stream", "StreamFactory", "VmemOocRuntime",
-    "build_attention_schedule", "build_gemm_schedule",
-    "build_vendor_schedule", "gpu_like", "is_in_core", "ooc_attention",
-    "ooc_gemm", "phi_like", "plan_attention_partition", "plan_for_device",
-    "plan_gemm_partition", "schedule_stats", "simulate", "tpu_v5e_ici",
-    "tpu_v5e_vmem", "validate_schedule",
+    "AttentionPartition", "BlockRef", "ComputeStage", "Device", "Event",
+    "ExecState", "GemmPartition", "HardwareModel", "HostOocRuntime",
+    "MeshOocRuntime", "Op", "OpKind", "OocRuntime", "PipelineSpec",
+    "RuntimeFactory", "Schedule", "ScheduleError", "ScheduleExecutor",
+    "SimResult", "SliceRef", "Stream", "StreamFactory", "StreamedOperand",
+    "VmemOocRuntime", "WriteBack", "attention_pipeline_spec",
+    "build_attention_schedule", "build_gemm_schedule", "build_syrk_schedule",
+    "build_vendor_schedule", "compile_pipeline", "gemm_pipeline_spec",
+    "gpu_like", "is_in_core", "ooc_attention", "ooc_gemm", "ooc_syrk",
+    "phi_like", "plan_attention_partition", "plan_for_device",
+    "plan_gemm_partition", "register_op_handler", "schedule_stats",
+    "simulate", "syrk_pipeline_spec", "tpu_v5e_ici", "tpu_v5e_vmem",
+    "validate_schedule", "vendor_pipeline_spec",
 ]

@@ -16,8 +16,14 @@ from typing import List, Optional
 from jax.sharding import Mesh
 
 from repro.core.partitioner import GemmPartition, plan_gemm_partition
-from repro.core.runtime import OocRuntime, RuntimeFactory
-from repro.core.streams import Device, Stream, StreamFactory
+from repro.core.pipeline import PipelineSpec, compile_pipeline
+from repro.core.runtime import (
+    OocRuntime,
+    RuntimeFactory,
+    ScheduleExecutor,
+    register_op_handler,
+)
+from repro.core.streams import Device, Schedule, Stream, StreamFactory
 
 # Device-type names map to memory tiers (DESIGN.md §2): the analogues of the
 # paper's {"GPU", "PHI", "FPGA"} triple.
@@ -57,3 +63,18 @@ def hclGetMemSize(device: Device) -> int:
 def hclMatrixPartitioner(M: int, N: int, K: int, dMemSize: int,
                          bytes_per_el: int = 4) -> GemmPartition:
     return plan_gemm_partition(M, N, K, dMemSize, bytes_per_el)
+
+
+def hclCompilePipeline(spec: PipelineSpec, nstreams: int = 2,
+                       nbuf: int = 2) -> Schedule:
+    """DSL entry point (the paper's §V "synchronization pattern can be
+    reused" future work): PipelineSpec -> event-correct Schedule."""
+    return compile_pipeline(spec, nstreams=nstreams, nbuf=nbuf)
+
+
+class hclScheduleExecutor(ScheduleExecutor):
+    """Facade alias: the single schedule interpreter (DESIGN.md §4), with
+    ``register_op_handler`` as the kernel extension point."""
+
+
+hclRegisterOpHandler = register_op_handler

@@ -5,15 +5,15 @@ kernel-agnostic).  The KV cache plays the role of the out-of-core operand;
 queries stay resident; each streamed (K, V) block updates an online-softmax
 carry (m, l, acc) — a different merge operator in the same schedule.
 
-This is the host-driven variant, executing the Schedule op-by-op like
-``HostOocRuntime``.  The jit-compatible in-model variant (lax.scan over KV
-blocks) lives in ``models/layers.py``; the Pallas in-VMEM variant in
+This is the host-driven variant: the :func:`attention_pipeline_spec` schedule
+runs on the shared :class:`~repro.core.runtime.ScheduleExecutor`, with the
+``attn`` / ``attn_out`` op handlers below supplying the kernel semantics.
+The jit-compatible in-model variant (lax.scan over KV blocks) lives in
+``models/layers.py``; the Pallas in-VMEM variant in
 ``kernels/flash_attention.py``.  All three agree with ``kernels/ref.py``.
 """
 
 from __future__ import annotations
-
-from typing import Dict, Hashable, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +21,12 @@ import numpy as np
 
 from repro.core.partitioner import plan_attention_partition
 from repro.core.pipeline import build_attention_schedule
-from repro.core.streams import OpKind, validate_schedule
+from repro.core.runtime import (
+    ExecState,
+    ScheduleExecutor,
+    register_op_handler,
+)
+from repro.core.streams import BlockRef, Op, validate_schedule
 
 
 @jax.jit
@@ -43,6 +48,33 @@ def _attn_block_update(q, k_blk, v_blk, m, l, acc):
     l_new = l * scale + p.sum(axis=1)
     acc_new = acc * scale[:, None] + jnp.einsum("hs,shd->hd", p, vb)
     return m_new, l_new, acc_new
+
+
+@register_op_handler("attn")
+def _attn_handler(st: ExecState, op: Op, ref: BlockRef) -> None:
+    """Online-softmax merge of one KV block into the (m, l, acc) carry."""
+    q = st.ctx["q"]
+    if "carry" not in st.scratch:
+        H, d = q.shape
+        st.scratch["carry"] = (
+            jnp.full((H,), -jnp.inf, dtype=jnp.float32),
+            jnp.zeros((H,), dtype=jnp.float32),
+            jnp.zeros((H, d), dtype=jnp.float32),
+        )
+    m, l, acc = st.scratch["carry"]
+    kb = st.bufs[op.buffers_read[0]]
+    vb = st.bufs[op.buffers_read[1]]
+    st.scratch["carry"] = _attn_block_update(
+        q.astype(jnp.float32), kb.astype(jnp.float32),
+        vb.astype(jnp.float32), m, l, acc)
+
+
+@register_op_handler("attn_out")
+def _attn_out_handler(st: ExecState, op: Op, ref: BlockRef) -> None:
+    """Finalize: normalize the carry and land it in the host output."""
+    m, l, acc = st.scratch["carry"]
+    out = st.outputs["out"]
+    out[...] = np.asarray((acc / l[:, None]).astype(out.dtype))
 
 
 def ooc_attention(
@@ -75,25 +107,13 @@ def ooc_attention(
     if validate:
         validate_schedule(sched)
 
-    bufs: Dict[Tuple[str, Hashable], jax.Array] = {}
-    m = jnp.full((H,), -jnp.inf, dtype=jnp.float32)
-    l = jnp.zeros((H,), dtype=jnp.float32)
-    acc = jnp.zeros((H, d), dtype=jnp.float32)
-
-    for op in sched.ops:
-        pl = op.payload or {}
-        if op.kind == OpKind.H2D:
-            idx = pl["idx"]
-            lo, hi = idx * part.bs, min(S, (idx + 1) * part.bs)
-            src = k_cache if pl["operand"] == "K" else v_cache
-            bufs[(pl["operand"], op.buffers_written[0][1])] = jnp.asarray(
-                src[lo:hi]
-            )
-        elif op.kind == OpKind.COMPUTE:
-            kb = bufs[("K", op.buffers_read[0][1])]
-            vb = bufs[("V", op.buffers_read[1][1])]
-            m, l, acc = _attn_block_update(
-                q.astype(jnp.float32), kb.astype(jnp.float32),
-                vb.astype(jnp.float32), m, l, acc)
-        # D2H R(out): final normalization below
-    return (acc / l[:, None]).astype(q.dtype)
+    # f32 carry lands in an f32 host buffer; the one cast to q.dtype happens
+    # at the end (a narrower KV dtype must not quantize the result).
+    out = np.zeros((H, d), dtype=np.float32)
+    ScheduleExecutor().run(
+        sched,
+        operands={"K": k_cache, "V": v_cache},
+        outputs={"out": out},
+        ctx={"q": q},
+    )
+    return jnp.asarray(out).astype(q.dtype)

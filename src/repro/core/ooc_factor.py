@@ -12,15 +12,16 @@ Right-looking blocked Cholesky on an SPD matrix held in host memory:
                                                   FLOPs — executed by the
                                                   OOC GEMM engine)
 
-Only O(panel x N) is resident during the panel steps; the trailing update
-streams through the same schedule/runtime machinery as MMOOC.
+Only O(panel x N) is resident during the panel steps; the trailing update is
+the first-class SYRK pipeline spec streamed through the same
+schedule/executor machinery as MMOOC.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.oocgemm import ooc_gemm
+from repro.core.oocgemm import ooc_syrk
 
 
 def ooc_cholesky(A, panel: int = 256, *, budget_bytes: int,
@@ -40,10 +41,10 @@ def ooc_cholesky(A, panel: int = 256, *, budget_bytes: int,
         # 2. panel solve: A[i,k] <- A[i,k] @ inv(Lkk)^T
         #    (solve Lkk @ X^T = A[i,k]^T; the panel is the resident set)
         A[k1:, k0:k1] = np.linalg.solve(Lkk, A[k1:, k0:k1].T).T
-        # 3. trailing symmetric update via the OOC engine:
-        #    A[k1:, k1:] -= P @ P^T
+        # 3. trailing symmetric update A[k1:, k1:] -= P @ P^T, streamed by
+        #    the OOC SYRK spec (no host-side P.T materialization)
         P = np.ascontiguousarray(A[k1:, k0:k1])
-        A[k1:, k1:] = np.asarray(ooc_gemm(
-            P, P.T, A[k1:, k1:], alpha=-1.0, beta=1.0,
+        A[k1:, k1:] = np.asarray(ooc_syrk(
+            P, A[k1:, k1:], alpha=-1.0, beta=1.0,
             budget_bytes=budget_bytes, backend=backend))
     return np.tril(A)

@@ -91,6 +91,56 @@ def ooc_gemm(
     raise ValueError(f"unknown backend {backend!r}")
 
 
+def ooc_syrk(
+    P,
+    C=None,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    *,
+    budget_bytes: int,
+    backend: str = "host",
+    nstreams: int = 2,
+    nbuf: int = 2,
+    validate: bool = False,
+    runtime: Optional[OocRuntime] = None,
+):
+    """Compute ``alpha * P @ P^T + beta * C`` out-of-core (blocked SYRK).
+
+    The Cholesky trailing update as a first-class pipeline kernel: on the
+    host backend the :func:`~repro.core.pipeline.syrk_pipeline_spec` streams
+    the panel twice (row slices and transposed row slices) through the same
+    schedule shape and ``dgemm`` handler as MMOOC, with no host-side ``P.T``
+    copy — only individual blocks are transposed in flight.  The vmem and
+    in-core paths delegate to the dense GEMM kernel and do materialize the
+    transpose on-device.
+    """
+    if backend not in ("host", "vmem"):
+        raise ValueError(f"unknown backend {backend!r}")
+    P = np.asarray(P) if backend == "host" else jnp.asarray(P)
+    n, K = P.shape
+    if C is None:
+        C = np.zeros((n, n), dtype=P.dtype) if backend == "host" \
+            else jnp.zeros((n, n), dtype=P.dtype)
+        beta = 0.0
+    bpe = np.dtype(P.dtype).itemsize
+
+    if is_in_core(n, n, K, budget_bytes, bpe):
+        out = _block_dgemm(jnp.asarray(P), jnp.asarray(P).T, jnp.asarray(C),
+                           jnp.float32(alpha), jnp.float32(beta))
+        return np.asarray(out) if backend == "host" else out
+
+    part = plan_gemm_partition(n, n, K, budget_bytes, bpe)
+    if backend == "host":
+        sched = plib.build_syrk_schedule(part, nstreams=nstreams, nbuf=nbuf)
+        if validate:
+            validate_schedule(sched)
+        rt = runtime or HostOocRuntime()
+        return rt.syrk(P, C, alpha, beta, part, schedule=sched)
+    # "vmem": the only other backend the top-of-function guard admits
+    rt = runtime or VmemOocRuntime()
+    return rt.gemm(P, jnp.asarray(P).T, C, alpha, beta, part)
+
+
 def plan_for_device(M: int, N: int, K: int, device: Device,
                     bytes_per_el: int = 4) -> GemmPartition:
     """Partition using the device's reported memory (hclGetMemSize path)."""

@@ -1,43 +1,151 @@
-"""Pipeline schedule builders — libhclooc's Fig. 2 program, generated.
+"""PipelineSpec DSL — libhclooc's Fig. 2 program, generated from a spec.
 
 The paper hand-writes a ~55-line event/stream program for out-of-core GEMM and
 notes (§V) that "this synchronization pattern is common and can be reused for
 out-of-core implementations of other data-parallel kernels", proposing a DSL
-as future work.  ``BlockPipelineBuilder`` is that DSL: a small builder that
-takes *stage* descriptions (transfer in / compute / transfer out, which buffer
-class each touches, how often each runs) and emits an event-correct
-multi-stream :class:`~repro.core.streams.Schedule`.
+as future work.  :class:`PipelineSpec` is that DSL: a declarative kernel
+description — which operand classes stream through device buffers, which
+blocks each pipeline step consumes, what the compute op is and whether it
+carries state between steps, and how results are written back — that
+:func:`compile_pipeline` turns into an event-correct multi-stream
+:class:`~repro.core.streams.Schedule`.
 
-Two instantiations ship:
+Three kernels ship as specs (DESIGN.md §4):
 
-  * :func:`build_gemm_schedule` — the paper's MMOOC pipeline
+  * :func:`gemm_pipeline_spec`      — the paper's MMOOC pipeline
     ``S(b_j) S(a_i) S(c_ij) DGEMM R(c_ij)`` with round-robin streams and the
     five event sets (rA, rB, rC, eA, wC).
-  * :func:`build_attention_schedule` — out-of-core attention over a blocked KV
-    cache (beyond paper): same pipeline with an online-softmax carry instead
-    of a beta-accumulate, demonstrating the claimed reusability.
+  * :func:`attention_pipeline_spec` — out-of-core attention over a blocked KV
+    cache (beyond paper): same stage graph with an online-softmax carry
+    instead of a beta-accumulate and one final write-back.
+  * :func:`syrk_pipeline_spec`      — the blocked-Cholesky trailing update
+    ``C <- alpha * P @ P^T + beta * C``: the *same* compute handler as GEMM
+    with the panel streamed twice (row slices and transposed column slices),
+    proving the reuse claim end-to-end.
 
 Schedules are *backend-neutral*: the simulator times them under a hardware
-model; the Host runtime executes them with real JAX ops.
+model; :class:`~repro.core.runtime.ScheduleExecutor` runs them with real JAX
+ops.  One schedule object drives simulation, host execution, and stats.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.partitioner import AttentionPartition, GemmPartition
 from repro.core.streams import (
+    BlockRef,
     Device,
     Event,
     Op,
     OpKind,
     Schedule,
+    SliceRef,
     StreamFactory,
 )
 
 
+# ===========================================================================
+# The spec
+# ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class StreamedOperand:
+    """One operand class streamed through parity device buffers.
+
+    Attributes:
+      name: buffer-class name — keys the device buffers and transfer tags
+            (``S(a[..])``); may differ from the host array the slices come
+            from (``slice_of``'s ``SliceRef.operand``), e.g. SYRK streams the
+            same panel as two operand classes.
+      nblocks: distinct blocks of this operand over the whole pipeline.
+      block_of: step -> block id this step consumes.  Blocks must be consumed
+            in non-decreasing contiguous runs (the paper's column-major order)
+            so each block transfers exactly once.
+      slice_of: block id -> typed host-slice payload for the H2D op.
+      bytes_of: block id -> transfer size (drives the simulator's bandwidth
+            model).
+      nbuf: device buffers for this class (None = the pipeline's ``nbuf``).
+            GEMM's B slice is a 2-deep ping-pong regardless of pipeline depth.
+      inout: read-modify-write operand (GEMM's C): its transfer must wait for
+            the previous occupant's *write-back*, not just its last read.
+    """
+
+    name: str
+    nblocks: int
+    block_of: Callable[[int], int]
+    slice_of: Callable[[int], SliceRef]
+    bytes_of: Callable[[int], int]
+    nbuf: Optional[int] = None
+    inout: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeStage:
+    """The per-step compute op.
+
+    ``kernel`` keys the executor's handler registry; ``reads`` names the
+    operand classes whose parity buffers are passed to the handler *in this
+    order* (the positional contract with
+    :func:`~repro.core.runtime.register_op_handler` handlers).  ``carry``
+    declares a resident accumulator read+written every step, which serializes
+    compute across streams (online-softmax state).
+    """
+
+    kernel: str
+    reads: Tuple[str, ...]
+    flops_of: Callable[[int], int]
+    carry: bool = False
+    tag: Optional[str] = None          # defaults to kernel.upper()
+    event: str = "e"                   # compute event name prefix
+
+
+@dataclasses.dataclass(frozen=True)
+class WriteBack:
+    """Write-back policy.
+
+    mode:
+      * "each"  — D2H the inout ``operand``'s block after every step (MMOOC).
+      * "keep"  — no transfer; a zero-flop release op recycles the buffer
+                  (SUMMA ``nsteps`` mode: C stays resident).
+      * "final" — one D2H at the end dispatching the ``kernel`` finalize
+                  handler (attention's normalize-and-emit).
+    """
+
+    mode: str
+    operand: Optional[str] = None      # inout class ("each"/"keep")
+    kernel: Optional[str] = None       # finalize handler key ("final")
+    out: Optional[str] = None          # host output name ("final")
+    bytes: int = 0                     # final transfer size
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSpec:
+    """Declarative out-of-core kernel: operands x compute x write-back.
+
+    ``compile_pipeline`` is the only consumer; everything a backend needs at
+    execution time rides on the generated ops as typed payloads.
+    """
+
+    name: str
+    nsteps: int
+    operands: Tuple[StreamedOperand, ...]
+    compute: ComputeStage
+    writeback: WriteBack
+    budget: int = 0
+
+    def operand(self, name: str) -> StreamedOperand:
+        for x in self.operands:
+            if x.name == name:
+                return x
+        raise KeyError(name)
+
+
+# ===========================================================================
+# Spec -> Schedule compiler
+# ===========================================================================
 class BlockPipelineBuilder:
-    """Generates the paper's round-robin / parity-buffer schedule shape.
+    """Low-level emitter for the paper's round-robin / parity-buffer shape.
 
     Semantics (faithful to libhclooc §V):
       * ``nbuf`` on-device buffers per streamed operand class; block ``idx``
@@ -45,8 +153,8 @@ class BlockPipelineBuilder:
       * compute for block ``idx`` runs on stream ``idx % nstreams``; the
         prefetch of block ``idx+1`` runs concurrently on stream
         ``(idx+1) % nstreams`` (the paper's ``idx1``/``idx2`` round robin).
-      * before a transfer overwrites a parity buffer, it waits on the event
-        proving the previous occupant's last consumer finished — the paper's
+      * before a transfer overwrites a parity buffer, it waits on the events
+        proving the previous occupant's last consumers finished — the paper's
         ``hclWaitEvent(eA[idx-1])`` / ``eC[idx-1]`` lines.
       * ``nstreams = 1`` degenerates to the fully serial Phi-style pipeline
         (claim C5): program order supplies every dependency.
@@ -58,7 +166,7 @@ class BlockPipelineBuilder:
         self.nbuf = nbuf
         self.nstreams = nstreams
         self.sched = Schedule(device, StreamFactory.create(device, nstreams))
-        self._events = {}
+        self._events: Dict[str, Event] = {}
 
     def event(self, name: str) -> Event:
         return self._events.setdefault(name, Event(name))
@@ -75,14 +183,160 @@ class BlockPipelineBuilder:
         return self.sched.issue(Op(**kw))
 
 
-def build_gemm_schedule(
-    part: GemmPartition,
+def compile_pipeline(
+    spec: PipelineSpec,
     nstreams: int = 2,
     nbuf: int = 2,
-    write_back: bool = True,
     device: Optional[Device] = None,
 ) -> Schedule:
-    """Emit the MMOOC schedule of libhclooc Fig. 2 for ``part``.
+    """Compile ``spec`` into an event-correct multi-stream Schedule.
+
+    Event wiring, generalizing the paper's five event sets:
+
+      * transfer of operand X block ``b`` records ``rX[b]`` and waits on the
+        release events of block ``b - nbuf_X`` (the parity buffer's previous
+        occupant): its write-back event if X is inout, else the compute
+        events of its last ``min(max(nbuf, nstreams), consumers)`` consuming
+        steps — enough to cover every stream the consumers ran on.
+      * compute at step ``s`` waits every operand's ``r`` event (plus the
+        previous step's compute event when a carry serializes the stage),
+        and records ``e[s]``.
+      * write-back per policy: D2H after each step ("each"), a zero-flop
+        buffer release ("keep"), or one finalize D2H at the end ("final").
+    """
+    dev = device or Device("HBM", 0, spec.budget)
+    b = BlockPipelineBuilder(dev, nstreams, nbuf)
+    ev = spec.compute.event
+    ctag = spec.compute.tag or spec.compute.kernel.upper()
+    wb = spec.writeback
+
+    # consuming steps per (operand, block): release points for buffer reuse.
+    consumers: Dict[Tuple[str, int], List[int]] = {}
+    for s in range(spec.nsteps):
+        for x in spec.operands:
+            consumers.setdefault((x.name, x.block_of(s)), []).append(s)
+
+    def release_waits(x: StreamedOperand, evicted: int) -> Tuple[Event, ...]:
+        if evicted < 0 or (x.name, evicted) not in consumers:
+            return ()
+        steps = consumers[(x.name, evicted)]
+        if x.inout:
+            return tuple(b.event(f"w{x.name}[{s}]") for s in steps)
+        # the last min(max(nbuf, nstreams), len) consumers cover every stream
+        # consecutive consuming steps were round-robined onto.
+        k = min(max(nbuf, nstreams), len(steps))
+        return tuple(b.event(f"{ev}[{s}]") for s in steps[-k:])
+
+    for s in range(spec.nsteps):
+        s_cur = b.compute_stream(s)
+        s_xfer = b.transfer_stream(s)
+
+        # -- H2D: bring in each operand block the moment the step needs it
+        for x in spec.operands:
+            blk = x.block_of(s)
+            if s > 0 and x.block_of(s - 1) == blk:
+                continue  # resident from a previous step (column reuse)
+            xn = x.nbuf or nbuf
+            b.issue(
+                kind=OpKind.H2D, tag=f"S({x.name.lower()}[{blk}])",
+                stream=s_xfer,
+                waits=release_waits(x, blk - xn),
+                records=b.event(f"r{x.name}[{blk}]"),
+                buffers_written=((x.name, blk % xn),),
+                bytes=x.bytes_of(blk),
+                payload=x.slice_of(blk),
+            )
+
+        # -- COMPUTE: positional buffers per the stage's `reads` contract
+        reads = []
+        waits = []
+        for name in spec.compute.reads:
+            x = spec.operand(name)
+            blk = x.block_of(s)
+            reads.append((name, blk % (x.nbuf or nbuf)))
+            waits.append(b.event(f"r{name}[{blk}]"))
+        writes = []
+        if wb.operand is not None:
+            x = spec.operand(wb.operand)
+            blk = x.block_of(s)
+            writes.append((wb.operand, blk % (x.nbuf or nbuf)))
+            waits.append(b.event(f"r{wb.operand}[{blk}]"))
+        if spec.compute.carry:
+            reads.append("carry")
+            writes.append("carry")
+            if s > 0:
+                waits.append(b.event(f"{ev}[{s - 1}]"))
+        b.issue(
+            kind=OpKind.COMPUTE, tag=f"{ctag}[{s}]", stream=s_cur,
+            waits=tuple(waits), records=b.event(f"{ev}[{s}]"),
+            buffers_read=tuple(reads), buffers_written=tuple(writes),
+            flops=spec.compute.flops_of(s),
+            payload=BlockRef(kernel=spec.compute.kernel, index=s),
+        )
+
+        # -- write-back
+        if wb.mode == "each":
+            x = spec.operand(wb.operand)
+            blk = x.block_of(s)
+            b.issue(
+                kind=OpKind.D2H, tag=f"R({wb.operand.lower()}[{s}])",
+                stream=s_cur,
+                waits=(b.event(f"{ev}[{s}]"),),
+                records=b.event(f"w{wb.operand}[{s}]"),
+                buffers_read=((wb.operand, blk % (x.nbuf or nbuf)),),
+                bytes=x.bytes_of(blk),
+                payload=x.slice_of(blk),
+            )
+        elif wb.mode == "keep":  # resident C (SUMMA mode); buffer recycles
+            x = spec.operand(wb.operand)
+            blk = x.block_of(s)
+            b.issue(
+                kind=OpKind.COMPUTE, tag=f"keep({wb.operand.lower()}[{s}])",
+                stream=s_cur,
+                waits=(b.event(f"{ev}[{s}]"),),
+                records=b.event(f"w{wb.operand}[{s}]"),
+                buffers_read=((wb.operand, blk % (x.nbuf or nbuf)),),
+                flops=0,
+                payload=BlockRef(kernel="noop", index=s),
+            )
+
+    if wb.mode == "final":
+        b.issue(
+            kind=OpKind.D2H, tag=f"R({wb.out})", stream=0,
+            waits=(b.event(f"{ev}[{spec.nsteps - 1}]"),),
+            records=b.event("done"),
+            buffers_read=("carry",),
+            bytes=wb.bytes,
+            payload=BlockRef(kernel=wb.kernel, index=spec.nsteps - 1),
+        )
+    return b.sched
+
+
+# ===========================================================================
+# Kernel specs
+# ===========================================================================
+def _block_accessors(part: GemmPartition):
+    """(rows, cols, flops) accessors over ``part.blocks()`` in issue order —
+    the one place that knows the block-tuple layout and the DGEMM flop model
+    (multiply-add on the K panel plus the alpha/beta epilogue)."""
+    blocks = list(part.blocks())
+
+    def rows(idx):
+        return blocks[idx][2], blocks[idx][3]
+
+    def cols(idx):
+        return blocks[idx][4], blocks[idx][5]
+
+    def flops(idx):
+        rn, cn = rows(idx)[1], cols(idx)[1]
+        return 2 * rn * cn * part.K + 3 * rn * cn
+
+    return rows, cols, flops
+
+
+def gemm_pipeline_spec(part: GemmPartition,
+                       write_back: bool = True) -> PipelineSpec:
+    """The paper's MMOOC pipeline as a spec.
 
     Stage set per C block (i, j), idx = j*h + i (column-major so each B slice
     transfers once per column):
@@ -92,90 +346,190 @@ def build_gemm_schedule(
       S(c_ij)  H2D   once per block              -> records rC[idx]
       DGEMM    COMP  waits rA,rB,rC              -> records eA[idx]
       R(c_ij)  D2H   same stream as DGEMM        -> records wC[idx]
-
-    Overwrite guards (buffer parity p = idx % nbuf):
-      S(a_idx) waits eA[idx-nbuf]        (A buffer free)
-      S(c_idx) waits wC[idx-nbuf]        (C buffer free: written back)
-      S(b_j)   waits eA of the last min(nbuf,h) blocks of column j-2
-               (B ping-pong buffer free once that column fully consumed)
     """
-    dev = device or Device("HBM", 0, part.budget)
-    b = BlockPipelineBuilder(dev, nstreams, nbuf)
-    sched = b.sched
     bpe = part.bytes_per_el
-    blocks = list(part.blocks())
-    h = part.h
+    rows, cols, flops = _block_accessors(part)
 
-    for idx, (i, j, rs, rn, cs, cn) in enumerate(blocks):
-        s_cur = b.compute_stream(idx)
-        # --- prefetch stream for this block's inputs: the paper issues block
-        # idx+1's transfers during block idx's DGEMM; equivalently every
-        # block's inputs are issued on its own parity stream, one block ahead.
-        s_xfer = b.transfer_stream(idx)
+    a = StreamedOperand(
+        name="A", nblocks=part.nblocks, block_of=lambda s: s,
+        slice_of=lambda blk: SliceRef("A", blk, rows=rows(blk)),
+        bytes_of=lambda blk: rows(blk)[1] * part.K * bpe,
+    )
+    bb = StreamedOperand(
+        name="B", nblocks=part.w, block_of=lambda s: s // part.h,
+        slice_of=lambda j: SliceRef("B", j, cols=part.block_cols(j)),
+        bytes_of=lambda j: part.K * part.block_cols(j)[1] * bpe,
+        nbuf=2,  # ping-pong regardless of pipeline depth (paper Fig. 2)
+    )
+    c = StreamedOperand(
+        name="C", nblocks=part.nblocks, block_of=lambda s: s,
+        slice_of=lambda blk: SliceRef("C", blk, rows=rows(blk),
+                                      cols=cols(blk)),
+        bytes_of=lambda blk: rows(blk)[1] * cols(blk)[1] * bpe,
+        inout=True,
+    )
+    return PipelineSpec(
+        name="gemm",
+        nsteps=part.nblocks,
+        operands=(bb, a, c),  # issue order: S(b) S(a) S(c), as in Fig. 2
+        compute=ComputeStage(
+            kernel="dgemm", reads=("A", "B"), tag="DGEMM", event="eA",
+            flops_of=flops,
+        ),
+        writeback=WriteBack(mode="each" if write_back else "keep",
+                            operand="C"),
+        budget=part.budget,
+    )
 
-        if i == 0:  # first block of column j: bring in B slice j
-            waits = []
-            if j >= 2:  # B ping-pong buffer occupied by column j-2
-                col_blocks = [j2 * h + i2 for (i2, j2) in
-                              [(x, j - 2) for x in range(h)]]
-                for k in col_blocks[-min(nbuf, h):]:
-                    waits.append(b.event(f"eA[{k}]"))
-            b.issue(
-                kind=OpKind.H2D, tag=f"S(b[{j}])", stream=s_xfer,
-                waits=tuple(waits), records=b.event(f"rB[{j}]"),
-                buffers_written=((("B", j % 2)),),
-                bytes=part.K * cn * bpe,
-                payload={"operand": "B", "j": j, "cs": cs, "cn": cn},
-            )
 
-        waits_a = (b.event(f"eA[{idx - nbuf}]"),) if idx - nbuf >= 0 else ()
-        b.issue(
-            kind=OpKind.H2D, tag=f"S(a[{idx}])", stream=s_xfer,
-            waits=waits_a, records=b.event(f"rA[{idx}]"),
-            buffers_written=(("A", idx % nbuf),),
-            bytes=rn * part.K * bpe,
-            payload={"operand": "A", "i": i, "rs": rs, "rn": rn},
+def attention_pipeline_spec(
+    part: AttentionPartition,
+    kv_heads: int,
+    head_dim: int,
+    q_heads: int,
+) -> PipelineSpec:
+    """OOC attention: stream KV blocks, accumulate online-softmax partials.
+
+    Demonstrates the paper's claim that the MMOOC synchronization pattern is
+    reusable for other data-parallel kernels: the stage graph is identical —
+    only the compute op (ATTN with (m, l, acc) carry) and the absence of a
+    per-block write-back (one final merge instead) differ.
+    """
+    bpe = part.bytes_per_el
+    blk_bytes = part.bs * kv_heads * head_dim * bpe
+
+    def kv_rows(blk):
+        lo = blk * part.bs
+        return lo, min(part.S, (blk + 1) * part.bs) - lo
+
+    def operand(name):
+        return StreamedOperand(
+            name=name, nblocks=part.nblocks, block_of=lambda s: s,
+            slice_of=lambda blk: SliceRef(name, blk, rows=kv_rows(blk)),
+            bytes_of=lambda blk: blk_bytes,
         )
-        waits_c = (b.event(f"wC[{idx - nbuf}]"),) if idx - nbuf >= 0 else ()
-        b.issue(
-            kind=OpKind.H2D, tag=f"S(c[{idx}])", stream=s_xfer,
-            waits=waits_c, records=b.event(f"rC[{idx}]"),
-            buffers_written=(("C", idx % nbuf),),
-            bytes=rn * cn * bpe,
-            payload={"operand": "C", "i": i, "j": j,
-                     "rs": rs, "rn": rn, "cs": cs, "cn": cn},
-        )
-        b.issue(
-            kind=OpKind.COMPUTE, tag=f"DGEMM[{idx}]", stream=s_cur,
-            waits=(b.event(f"rA[{idx}]"), b.event(f"rB[{j}]"),
-                   b.event(f"rC[{idx}]")),
-            records=b.event(f"eA[{idx}]"),
-            buffers_read=(("A", idx % nbuf), ("B", j % 2)),
-            buffers_written=(("C", idx % nbuf),),
-            flops=2 * rn * cn * part.K + 3 * rn * cn,
-            payload={"idx": idx, "i": i, "j": j,
-                     "rs": rs, "rn": rn, "cs": cs, "cn": cn},
-        )
-        if write_back:
-            b.issue(
-                kind=OpKind.D2H, tag=f"R(c[{idx}])", stream=s_cur,
-                waits=(b.event(f"eA[{idx}]"),),
-                records=b.event(f"wC[{idx}]"),
-                buffers_read=(("C", idx % nbuf),),
-                bytes=rn * cn * bpe,
-                payload={"operand": "C", "i": i, "j": j,
-                         "rs": rs, "rn": rn, "cs": cs, "cn": cn},
-            )
-        else:  # C stays resident (SUMMA nsteps mode); buffer still recycles
-            b.issue(
-                kind=OpKind.COMPUTE, tag=f"keep(c[{idx}])", stream=s_cur,
-                waits=(b.event(f"eA[{idx}]"),),
-                records=b.event(f"wC[{idx}]"),
-                buffers_read=(("C", idx % nbuf),),
-                flops=0,
-                payload={"noop": True},
-            )
-    return sched
+
+    return PipelineSpec(
+        name="attention",
+        nsteps=part.nblocks,
+        operands=(operand("K"), operand("V")),
+        compute=ComputeStage(
+            kernel="attn", reads=("K", "V"), tag="ATTN", event="eKV",
+            carry=True,
+            flops_of=lambda s: 2 * q_heads * part.bs * head_dim * 2,
+        ),
+        writeback=WriteBack(mode="final", kernel="attn_out", out="out",
+                            bytes=q_heads * head_dim * bpe),
+        budget=part.budget,
+    )
+
+
+def syrk_pipeline_spec(part: GemmPartition,
+                       alpha_tag: str = "P") -> PipelineSpec:
+    """Blocked SYRK ``C <- alpha * P @ P^T + beta * C`` as a spec.
+
+    The Cholesky trailing update, first-class: the same ``dgemm`` handler as
+    MMOOC consumes the panel twice — row slices (``Pr``, the A role) and
+    transposed row slices (``Pt``, the B role) — with no host-side ``P.T``
+    materialization.  ``part`` partitions the symmetric C (M = N = trailing
+    dim, K = panel width).
+    """
+    bpe = part.bytes_per_el
+    rows, cols, flops = _block_accessors(part)
+
+    pr = StreamedOperand(
+        name="Pr", nblocks=part.nblocks, block_of=lambda s: s,
+        slice_of=lambda blk: SliceRef(alpha_tag, blk, rows=rows(blk)),
+        bytes_of=lambda blk: rows(blk)[1] * part.K * bpe,
+    )
+    pt = StreamedOperand(
+        name="Pt", nblocks=part.w, block_of=lambda s: s // part.h,
+        slice_of=lambda j: SliceRef(alpha_tag, j, rows=part.block_cols(j),
+                                    transpose=True),
+        bytes_of=lambda j: part.block_cols(j)[1] * part.K * bpe,
+        nbuf=2,
+    )
+    c = StreamedOperand(
+        name="C", nblocks=part.nblocks, block_of=lambda s: s,
+        slice_of=lambda blk: SliceRef("C", blk, rows=rows(blk),
+                                      cols=cols(blk)),
+        bytes_of=lambda blk: rows(blk)[1] * cols(blk)[1] * bpe,
+        inout=True,
+    )
+    return PipelineSpec(
+        name="syrk",
+        nsteps=part.nblocks,
+        operands=(pt, pr, c),
+        compute=ComputeStage(
+            kernel="dgemm", reads=("Pr", "Pt"), tag="SYRK", event="eP",
+            flops_of=flops,
+        ),
+        writeback=WriteBack(mode="each", operand="C"),
+        budget=part.budget,
+    )
+
+
+def vendor_pipeline_spec(part: GemmPartition, tile: int = 512) -> PipelineSpec:
+    """CUBLAS-XT-style baseline spec (the paper's C3 comparison point).
+
+    CUBLAS-XT tiles C into fixed square blocks (default ~4k) and, per tile,
+    synchronously streams the corresponding A-row and B-column *panels* —
+    i.e. B panels are re-sent for every row of tiles (no column reuse) and
+    nothing overlaps.  The spec models exactly that: per-step B blocks (every
+    step re-transfers its panel), single buffers, compiled with one stream.
+    """
+    bpe = part.bytes_per_el
+    vpart = GemmPartition(
+        part.M, part.N, part.K,
+        (part.M + tile - 1) // tile, (part.N + tile - 1) // tile,
+        min(tile, part.M), min(tile, part.N), bpe, part.budget)
+    rows, cols, flops = _block_accessors(vpart)
+
+    a = StreamedOperand(
+        name="A", nblocks=vpart.nblocks, block_of=lambda s: s,
+        slice_of=lambda blk: SliceRef("A", blk, rows=rows(blk)),
+        bytes_of=lambda blk: rows(blk)[1] * part.K * bpe,
+        nbuf=1,
+    )
+    bb = StreamedOperand(  # re-sent per C tile: block id == step (no reuse)
+        name="B", nblocks=vpart.nblocks, block_of=lambda s: s,
+        slice_of=lambda blk: SliceRef("B", blk, cols=cols(blk)),
+        bytes_of=lambda blk: part.K * cols(blk)[1] * bpe,
+        nbuf=1,
+    )
+    c = StreamedOperand(
+        name="C", nblocks=vpart.nblocks, block_of=lambda s: s,
+        slice_of=lambda blk: SliceRef("C", blk, rows=rows(blk),
+                                      cols=cols(blk)),
+        bytes_of=lambda blk: rows(blk)[1] * cols(blk)[1] * bpe,
+        nbuf=1, inout=True,
+    )
+    return PipelineSpec(
+        name="vendor",
+        nsteps=vpart.nblocks,
+        operands=(bb, a, c),
+        compute=ComputeStage(
+            kernel="dgemm", reads=("A", "B"), tag="DGEMM", event="eA",
+            flops_of=flops,
+        ),
+        writeback=WriteBack(mode="each", operand="C"),
+        budget=part.budget,
+    )
+
+
+# ===========================================================================
+# Builders (spec wrappers — the pre-DSL public surface)
+# ===========================================================================
+def build_gemm_schedule(
+    part: GemmPartition,
+    nstreams: int = 2,
+    nbuf: int = 2,
+    write_back: bool = True,
+    device: Optional[Device] = None,
+) -> Schedule:
+    """Emit the MMOOC schedule of libhclooc Fig. 2 for ``part``."""
+    return compile_pipeline(gemm_pipeline_spec(part, write_back=write_back),
+                            nstreams=nstreams, nbuf=nbuf, device=device)
 
 
 def build_attention_schedule(
@@ -187,54 +541,20 @@ def build_attention_schedule(
     nbuf: int = 2,
     device: Optional[Device] = None,
 ) -> Schedule:
-    """OOC attention: stream KV blocks, accumulate online-softmax partials.
+    """OOC attention schedule: KV blocks + online-softmax carry."""
+    spec = attention_pipeline_spec(part, kv_heads, head_dim, q_heads)
+    return compile_pipeline(spec, nstreams=nstreams, nbuf=nbuf, device=device)
 
-    Demonstrates the paper's claim that the MMOOC synchronization pattern is
-    reusable for other data-parallel kernels: the stage graph is identical —
-    only the compute op (ATTN with (m, l, acc) carry) and the absence of a
-    per-block write-back (one final merge instead) differ.
-    """
-    dev = device or Device("HBM", 0, part.budget)
-    b = BlockPipelineBuilder(dev, nstreams, nbuf)
-    bpe = part.bytes_per_el
-    blk_bytes = part.bs * kv_heads * head_dim * bpe
 
-    for idx in range(part.nblocks):
-        s_cur = b.compute_stream(idx)
-        s_xfer = b.transfer_stream(idx)
-        waits_kv = (b.event(f"eKV[{idx - nbuf}]"),) if idx - nbuf >= 0 else ()
-        b.issue(
-            kind=OpKind.H2D, tag=f"S(k[{idx}])", stream=s_xfer,
-            waits=waits_kv, records=b.event(f"rK[{idx}]"),
-            buffers_written=(("K", idx % nbuf),), bytes=blk_bytes,
-            payload={"operand": "K", "idx": idx},
-        )
-        b.issue(
-            kind=OpKind.H2D, tag=f"S(v[{idx}])", stream=s_xfer,
-            waits=waits_kv, records=b.event(f"rV[{idx}]"),
-            buffers_written=(("V", idx % nbuf),), bytes=blk_bytes,
-            payload={"operand": "V", "idx": idx},
-        )
-        # carry buffer is a single accumulator: serialized via carry reads.
-        prev = (b.event(f"eKV[{idx - 1}]"),) if idx > 0 else ()
-        b.issue(
-            kind=OpKind.COMPUTE, tag=f"ATTN[{idx}]", stream=s_cur,
-            waits=(b.event(f"rK[{idx}]"), b.event(f"rV[{idx}]")) + prev,
-            records=b.event(f"eKV[{idx}]"),
-            buffers_read=(("K", idx % nbuf), ("V", idx % nbuf), "carry"),
-            buffers_written=("carry",),
-            flops=2 * q_heads * part.bs * head_dim * 2,  # qk^T and pv
-            payload={"idx": idx},
-        )
-    b.issue(
-        kind=OpKind.D2H, tag="R(out)", stream=0,
-        waits=(b.event(f"eKV[{part.nblocks - 1}]"),),
-        records=b.event("done"),
-        buffers_read=("carry",),
-        bytes=q_heads * head_dim * bpe,
-        payload={"operand": "out"},
-    )
-    return b.sched
+def build_syrk_schedule(
+    part: GemmPartition,
+    nstreams: int = 2,
+    nbuf: int = 2,
+    device: Optional[Device] = None,
+) -> Schedule:
+    """Blocked SYRK schedule (Cholesky trailing update)."""
+    return compile_pipeline(syrk_pipeline_spec(part),
+                            nstreams=nstreams, nbuf=nbuf, device=device)
 
 
 def build_vendor_schedule(
@@ -242,54 +562,9 @@ def build_vendor_schedule(
     device: Optional[Device] = None,
     tile: int = 512,
 ) -> Schedule:
-    """CUBLAS-XT-style baseline schedule (the paper's C3 comparison point).
-
-    CUBLAS-XT tiles C into fixed square blocks (default ~4k) and, per tile,
-    synchronously streams the corresponding A-row and B-column *panels* —
-    i.e. B panels are re-sent for every row of tiles (no column reuse) and
-    nothing overlaps.  We model exactly that: one stream, per-block
-    B re-transfer, DGEMM strictly after its transfers, write-back before the
-    next tile starts.
-    """
-    dev = device or Device("HBM", 0, part.budget)
-    b = BlockPipelineBuilder(dev, nstreams=1, nbuf=1)
-    bpe = part.bytes_per_el
-    # CUBLAS-XT tiles C into fixed square blocks regardless of the memory
-    # budget; model that with its own `tile`-sized partition.
-    vpart = GemmPartition(
-        part.M, part.N, part.K,
-        (part.M + tile - 1) // tile, (part.N + tile - 1) // tile,
-        min(tile, part.M), min(tile, part.N), bpe, part.budget)
-    for idx, (i, j, rs, rn, cs, cn) in enumerate(vpart.blocks()):
-        b.issue(kind=OpKind.H2D, tag=f"S(b[{idx}])", stream=0,
-                records=b.event(f"rB[{idx}]"),
-                buffers_written=(("B", 0),), bytes=part.K * cn * bpe,
-                payload={"operand": "B", "j": j, "cs": cs, "cn": cn})
-        b.issue(kind=OpKind.H2D, tag=f"S(a[{idx}])", stream=0,
-                records=b.event(f"rA[{idx}]"),
-                buffers_written=(("A", 0),), bytes=rn * part.K * bpe,
-                payload={"operand": "A", "i": i, "rs": rs, "rn": rn})
-        b.issue(kind=OpKind.H2D, tag=f"S(c[{idx}])", stream=0,
-                records=b.event(f"rC[{idx}]"),
-                buffers_written=(("C", 0),), bytes=rn * cn * bpe,
-                payload={"operand": "C", "i": i, "j": j,
-                         "rs": rs, "rn": rn, "cs": cs, "cn": cn})
-        b.issue(kind=OpKind.COMPUTE, tag=f"DGEMM[{idx}]", stream=0,
-                waits=(b.event(f"rA[{idx}]"), b.event(f"rB[{idx}]"),
-                       b.event(f"rC[{idx}]")),
-                records=b.event(f"eA[{idx}]"),
-                buffers_read=(("A", 0), ("B", 0)),
-                buffers_written=(("C", 0),),
-                flops=2 * rn * cn * part.K + 3 * rn * cn,
-                payload={"idx": idx, "i": i, "j": j,
-                         "rs": rs, "rn": rn, "cs": cs, "cn": cn})
-        b.issue(kind=OpKind.D2H, tag=f"R(c[{idx}])", stream=0,
-                waits=(b.event(f"eA[{idx}]"),),
-                records=b.event(f"wC[{idx}]"),
-                buffers_read=(("C", 0),), bytes=rn * cn * bpe,
-                payload={"operand": "C", "i": i, "j": j,
-                         "rs": rs, "rn": rn, "cs": cs, "cn": cn})
-    return b.sched
+    """CUBLAS-XT-style baseline: one stream, B re-sent per tile, no overlap."""
+    return compile_pipeline(vendor_pipeline_spec(part, tile=tile),
+                            nstreams=1, nbuf=1, device=device)
 
 
 def schedule_stats(sched: Schedule) -> dict:

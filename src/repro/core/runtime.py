@@ -23,8 +23,9 @@ are cross-checked against ``kernels/ref.py`` in tests.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Dict, Hashable, Optional, Tuple
+from typing import Any, Callable, Dict, Hashable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +34,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import pipeline as plib
 from repro.core.partitioner import GemmPartition, plan_gemm_partition
-from repro.core.streams import Device, OpKind, Schedule
+from repro.core.streams import BlockRef, Device, Op, OpKind, Schedule, SliceRef
 
 
 class OocRuntime:
@@ -61,19 +62,185 @@ def _block_dgemm(a, b, c, alpha, beta, transpose: bool = False):
     return (alpha * acc + beta * c).astype(c.dtype)
 
 
-class HostOocRuntime(OocRuntime):
-    """Executes a block schedule with eager JAX ops.
+# ===========================================================================
+# ScheduleExecutor — the single schedule interpreter for every host path
+# ===========================================================================
+HandlerFn = Callable[["ExecState", Op, BlockRef], None]
+_OP_HANDLERS: Dict[str, HandlerFn] = {}
 
-    Faithful mechanics: ``nbuf`` device buffers per operand class, transfers
-    keyed by the schedule's payload, DGEMM on the parity buffers, write-back
-    into the host result.  On real hardware JAX's async dispatch overlaps the
-    transfer of block ``idx+1`` with the DGEMM of block ``idx`` exactly as the
-    event program orders them; on CPU the schedule is executed with identical
-    semantics (ordering + results), which is what tests assert.
+
+def register_op_handler(kernel: str) -> Callable[[HandlerFn], HandlerFn]:
+    """Register ``fn(state, op, ref)`` for ops whose :class:`BlockRef` payload
+    names ``kernel`` — COMPUTE dispatch and "final"-mode D2H finalizers.
+
+    Handlers receive parity buffers positionally via ``op.buffers_read`` /
+    ``op.buffers_written`` in the order the :class:`PipelineSpec` declared
+    them, kernel parameters via ``state.ctx``, and may keep carry state in
+    ``state.scratch``.
     """
 
-    def __init__(self, device: Optional[Device] = None):
+    def deco(fn: HandlerFn) -> HandlerFn:
+        _OP_HANDLERS[kernel] = fn
+        return fn
+
+    return deco
+
+
+@dataclasses.dataclass
+class ExecState:
+    """Mutable execution state threaded through op handlers."""
+
+    bufs: Dict[Tuple[str, Hashable], jax.Array]  # device parity buffers
+    operands: Dict[str, Any]                     # host-resident inputs
+    outputs: Dict[str, np.ndarray]               # host results (in-place)
+    ctx: Dict[str, Any]                          # kernel parameters
+    scratch: Dict[str, Any]                      # handler carry state
+
+    def host(self, name: str):
+        """Host array an H2D slices from: inout operands read the live
+        output so a kernel can accumulate into what it already wrote."""
+        return self.outputs[name] if name in self.outputs \
+            else self.operands[name]
+
+
+def _take(arr, ref: SliceRef):
+    if ref.rows is not None:
+        arr = arr[ref.rows[0]:ref.rows[0] + ref.rows[1]]
+    if ref.cols is not None:
+        arr = arr[:, ref.cols[0]:ref.cols[0] + ref.cols[1]]
+    return arr.T if ref.transpose else arr
+
+
+def _spans_overlap(a: SliceRef, b: SliceRef, shape) -> bool:
+    def hit(sa, sb, extent):
+        lo_a, n_a = sa if sa is not None else (0, extent)
+        lo_b, n_b = sb if sb is not None else (0, extent)
+        return lo_a < lo_b + n_b and lo_b < lo_a + n_a
+
+    return (a.operand == b.operand
+            and hit(a.rows, b.rows, shape[0])
+            and hit(a.cols, b.cols, shape[1] if len(shape) > 1 else 1))
+
+
+class ScheduleExecutor:
+    """Executes a :class:`Schedule` against host arrays with real JAX ops.
+
+    One interpreter for every host-driven kernel (GEMM, attention, SYRK, the
+    hand-rolled benchmark baselines): H2D slices the typed
+    :class:`SliceRef` payload into a parity buffer, COMPUTE dispatches the
+    :class:`BlockRef` payload through the handler registry, D2H writes a
+    parity buffer back into the destination slice (or dispatches a finalize
+    handler).  Ops run in global issue order: on a single-stream-per-device
+    backend (XLA CPU/TPU enqueue) issue order + data deps realize the event
+    program; cross-stream reordering freedom only adds overlap on hardware
+    with parallel engines.
+
+    ``async_writeback=True`` is the double-buffered mode mirroring the event
+    program on real hardware: a D2H only *dispatches* (the device block stays
+    in flight) and materializes when its parity buffer is about to be
+    overwritten — i.e. the host blocks on block ``idx``'s compute only after
+    block ``idx+1``'s transfers were issued, exactly the paper's overlap.
+    """
+
+    def __init__(self,
+                 handlers: Optional[Dict[str, HandlerFn]] = None,
+                 async_writeback: bool = True):
+        self.handlers = dict(handlers) if handlers else {}
+        self.async_writeback = async_writeback
+
+    def _handler(self, ref: BlockRef) -> HandlerFn:
+        fn = self.handlers.get(ref.kernel) or _OP_HANDLERS.get(ref.kernel)
+        if fn is None:
+            raise KeyError(
+                f"no op handler registered for kernel {ref.kernel!r}; "
+                f"known: {sorted(set(_OP_HANDLERS) | set(self.handlers))}"
+            )
+        return fn
+
+    def run(self,
+            sched: Schedule,
+            operands: Dict[str, Any],
+            outputs: Dict[str, np.ndarray],
+            ctx: Optional[Dict[str, Any]] = None) -> ExecState:
+        st = ExecState(bufs={}, operands=operands, outputs=outputs,
+                       ctx=ctx or {}, scratch={})
+        # parity-buffer key -> (in-flight device block, destination slice)
+        pending: Dict[Tuple[str, Hashable], Tuple[Any, SliceRef]] = {}
+
+        def flush(key) -> None:
+            blk, ref = pending.pop(key)
+            arr = np.asarray(blk)
+            dest = st.outputs[ref.operand]
+            if ref.transpose:
+                arr = arr.T
+            rs, rn = ref.rows if ref.rows is not None else (0, dest.shape[0])
+            if dest.ndim > 1:
+                cs, cn = ref.cols if ref.cols is not None \
+                    else (0, dest.shape[1])
+                dest[rs:rs + rn, cs:cs + cn] = arr
+            else:
+                dest[rs:rs + rn] = arr
+
+        for op in sched.ops:
+            ref = op.payload
+            if op.kind == OpKind.H2D:
+                key = op.buffers_written[0]
+                if key in pending:       # schedule's wC wait point: the
+                    flush(key)           # previous occupant lands now
+                if ref.operand in st.outputs:  # host coherence on re-read
+                    src_shape = st.outputs[ref.operand].shape
+                    for k in [k for k, (_, pref) in pending.items()
+                              if _spans_overlap(ref, pref, src_shape)]:
+                        flush(k)
+                st.bufs[key] = jnp.asarray(_take(st.host(ref.operand), ref))
+            elif op.kind == OpKind.COMPUTE:
+                self._handler(ref)(st, op, ref)
+            elif op.kind == OpKind.D2H:
+                if isinstance(ref, BlockRef):  # finalize handler
+                    self._handler(ref)(st, op, ref)
+                    continue
+                key = op.buffers_read[0]
+                if key in pending:
+                    flush(key)
+                pending[key] = (st.bufs[key], ref)
+                if not self.async_writeback:
+                    flush(key)
+        for key in list(pending):
+            flush(key)
+        return st
+
+
+@register_op_handler("noop")
+def _noop_handler(st: ExecState, op: Op, ref: BlockRef) -> None:
+    """Buffer-release marker ("keep" write-back mode): nothing to execute."""
+
+
+@register_op_handler("dgemm")
+def _dgemm_handler(st: ExecState, op: Op, ref: BlockRef) -> None:
+    """C_p = alpha * lhs @ rhs + beta * C_p on parity buffers (GEMM + SYRK:
+    buffers_read = (lhs, rhs), buffers_written[0] = accumulator)."""
+    ckey = op.buffers_written[0]
+    st.bufs[ckey] = _block_dgemm(
+        st.bufs[op.buffers_read[0]], st.bufs[op.buffers_read[1]],
+        st.bufs[ckey],
+        jnp.asarray(st.ctx.get("alpha", 1.0), dtype=jnp.float32),
+        jnp.asarray(st.ctx.get("beta", 0.0), dtype=jnp.float32),
+    )
+
+
+class HostOocRuntime(OocRuntime):
+    """Host-driven block streaming: builds (or accepts) a pipeline schedule
+    and hands it to the shared :class:`ScheduleExecutor` — no private
+    interpreter loop.  On real hardware JAX's async dispatch overlaps the
+    transfer of block ``idx+1`` with the DGEMM of block ``idx`` exactly as
+    the event program orders them; on CPU the schedule executes with
+    identical semantics (ordering + results), which is what tests assert.
+    """
+
+    def __init__(self, device: Optional[Device] = None,
+                 executor: Optional[ScheduleExecutor] = None):
         self.device = device or Device("HBM", 0, 16 * 2**30)
+        self.executor = executor or ScheduleExecutor()
 
     def gemm(self, A, B, C, alpha, beta, part: GemmPartition,
              nstreams: int = 2, nbuf: int = 2,
@@ -82,41 +249,29 @@ class HostOocRuntime(OocRuntime):
             part, nstreams=nstreams, nbuf=nbuf
         )
         out = np.array(C, copy=True)
-        bufs: Dict[Tuple[str, Hashable], jax.Array] = {}
+        self.executor.run(
+            sched,
+            operands={"A": np.asarray(A), "B": np.asarray(B)},
+            outputs={"C": out},
+            ctx={"alpha": alpha, "beta": beta},
+        )
+        return out
 
-        # Execute in global issue order: on a single-stream-per-device backend
-        # (XLA CPU/TPU enqueue), issue order + data deps realize the event
-        # program; cross-stream reordering freedom only adds overlap on HW
-        # with parallel engines.
-        for op in sched.ops:
-            pl = op.payload or {}
-            if op.kind == OpKind.H2D:
-                if pl["operand"] == "A":
-                    blk = A[pl["rs"]:pl["rs"] + pl["rn"], :]
-                    bufs[("A", op.buffers_written[0][1])] = jnp.asarray(blk)
-                elif pl["operand"] == "B":
-                    blk = B[:, pl["cs"]:pl["cs"] + pl["cn"]]
-                    bufs[("B", op.buffers_written[0][1])] = jnp.asarray(blk)
-                elif pl["operand"] == "C":
-                    blk = out[pl["rs"]:pl["rs"] + pl["rn"],
-                              pl["cs"]:pl["cs"] + pl["cn"]]
-                    bufs[("C", op.buffers_written[0][1])] = jnp.asarray(blk)
-            elif op.kind == OpKind.COMPUTE:
-                if pl.get("noop"):
-                    continue
-                pa = ("A", op.buffers_read[0][1])
-                pb = ("B", op.buffers_read[1][1])
-                pc = ("C", op.buffers_written[0][1])
-                bufs[pc] = _block_dgemm(
-                    bufs[pa], bufs[pb], bufs[pc],
-                    jnp.asarray(alpha, dtype=jnp.float32),
-                    jnp.asarray(beta, dtype=jnp.float32),
-                )
-            elif op.kind == OpKind.D2H:
-                if pl.get("operand") == "C":
-                    pc = ("C", op.buffers_read[0][1])
-                    out[pl["rs"]:pl["rs"] + pl["rn"],
-                        pl["cs"]:pl["cs"] + pl["cn"]] = np.asarray(bufs[pc])
+    def syrk(self, P, C, alpha, beta, part: GemmPartition,
+             nstreams: int = 2, nbuf: int = 2,
+             schedule: Optional[Schedule] = None):
+        """C = alpha * P @ P^T + beta * C via the SYRK pipeline spec (the
+        Cholesky trailing update as a first-class schedule)."""
+        sched = schedule or plib.build_syrk_schedule(
+            part, nstreams=nstreams, nbuf=nbuf
+        )
+        out = np.array(C, copy=True)
+        self.executor.run(
+            sched,
+            operands={"P": np.asarray(P)},
+            outputs={"C": out},
+            ctx={"alpha": alpha, "beta": beta},
+        )
         return out
 
 

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, Hashable, List, Optional, Sequence, Tuple
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple, Union
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +45,42 @@ class OpKind(enum.Enum):
     H2D = "H2D"          # backing tier -> fast tier (paper: host to device)
     D2H = "D2H"          # fast tier -> backing tier
     COMPUTE = "COMPUTE"  # in-core kernel on resident blocks (paper: DGEMM)
+
+
+@dataclasses.dataclass(frozen=True)
+class SliceRef:
+    """Typed transfer payload: which host-side slice an H2D/D2H op moves.
+
+    ``operand`` names a streamed operand class (the key the executor uses to
+    look up the host array); ``index`` is the operand's block number; ``rows``
+    and ``cols`` are ``(start, size)`` half-open slices (None = full extent);
+    ``transpose`` transposes the slice after extraction (SYRK streams the same
+    panel as both the row and the transposed column operand).
+    """
+
+    operand: str
+    index: int
+    rows: Optional[Tuple[int, int]] = None
+    cols: Optional[Tuple[int, int]] = None
+    transpose: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockRef:
+    """Typed compute/finalize payload: which registered kernel handler runs.
+
+    ``kernel`` is the key into the :class:`~repro.core.runtime.ScheduleExecutor`
+    handler registry ("dgemm", "attn", "noop", ...); ``index`` is the pipeline
+    step.  Buffer operands are carried by the op's ``buffers_read`` /
+    ``buffers_written`` in the spec's declared order, so handlers are
+    positional — no raw dict spelunking.
+    """
+
+    kernel: str
+    index: int
+
+
+Payload = Union[SliceRef, BlockRef]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,7 +123,7 @@ class Op:
     buffers_written: Tuple[Hashable, ...] = ()
     bytes: int = 0
     flops: int = 0
-    payload: Optional[dict] = None  # backend-specific (block indices etc.)
+    payload: Optional[Payload] = None  # typed SliceRef / BlockRef
 
 
 @dataclasses.dataclass
@@ -206,24 +242,60 @@ def validate_schedule(sched: Schedule) -> None:
         if state[u] == 0:
             visit(u)
 
-    # transitive happens-before via reachability over preds (2).
-    reach = [set() for _ in range(n)]  # reach[i] = ops that happen-before i
+    # O(n * nstreams) happens-before oracle: per-stream vector clocks
+    # computed along the topo order.  clock[i][s] = number of ops on stream s
+    # that happen before (or are) op i; since a stream is totally ordered,
+    # hb(a, b) <=> clock[b][stream(a)] > pos_in_stream(a).
+    nstreams = len(sched.streams)
+    pos = [0] * n  # op's position within its own stream
+    seen: Dict[int, int] = {}
+    for idx, op in enumerate(ops):
+        pos[idx] = seen.get(op.stream, 0)
+        seen[op.stream] = pos[idx] + 1
+    clock = [[0] * nstreams for _ in range(n)]
     for u in order:  # preds appear before u in topo order
+        cu = clock[u]
         for p in preds[u]:
-            reach[u].add(p)
-            reach[u] |= reach[p]
+            cp = clock[p]
+            for s in range(nstreams):
+                if cp[s] > cu[s]:
+                    cu[s] = cp[s]
+        su = ops[u].stream
+        if pos[u] + 1 > cu[su]:
+            cu[su] = pos[u] + 1
 
     def hb(a: int, b: int) -> bool:
-        return a in reach[b]
+        return a != b and clock[b][ops[a].stream] > pos[a]
 
-    for i in range(n):
-        for j in range(i + 1, n):
-            oi, oj = ops[i], ops[j]
-            conflict = (
-                set(oi.buffers_written) & (set(oj.buffers_read) | set(oj.buffers_written))
-            ) or (set(oi.buffers_read) & set(oj.buffers_written))
-            if conflict and not (hb(i, j) or hb(j, i)):
-                raise ScheduleError(
-                    f"unordered conflicting ops on buffers {sorted(map(str, conflict))}: "
-                    f"{oi.tag} (issue {i}) vs {oj.tag} (issue {j})"
-                )
+    # Per-buffer reader/writer frontier sweep (2), linear in total buffer
+    # accesses: walking a topological linearization, each buffer tracks its
+    # last writer and the readers since that write.  A reader must be ordered
+    # after the last writer; a writer after the last writer AND every reader
+    # since.  Transitivity of hb makes the frontier sufficient: any older
+    # accessor is ordered before the frontier op that displaced it.
+    last_writer: Dict[Hashable, int] = {}
+    readers: Dict[Hashable, List[int]] = {}
+
+    def check(prev: int, cur: int, buf: Hashable) -> None:
+        if not hb(prev, cur):
+            raise ScheduleError(
+                f"unordered conflicting ops on buffer {buf!r}: "
+                f"{ops[prev].tag} (issue {prev}) vs {ops[cur].tag} (issue {cur})"
+            )
+
+    for u in order:
+        op = ops[u]
+        for b in op.buffers_read:
+            w = last_writer.get(b)
+            if w is not None:
+                check(w, u, b)
+            readers.setdefault(b, []).append(u)
+        for b in op.buffers_written:
+            w = last_writer.get(b)
+            if w is not None:
+                check(w, u, b)
+            for r in readers.get(b, ()):
+                if r != u:
+                    check(r, u, b)
+            last_writer[b] = u
+            readers[b] = []

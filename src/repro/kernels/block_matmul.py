@@ -27,6 +27,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params, tpu_memory_space
+
+_MS = tpu_memory_space()
+_CP = tpu_compiler_params()
+
 
 def _kernel(a_ref, b_ref, c_ref, out_ref, acc_ref, *, alpha, beta, k_steps):
     k = pl.program_id(2)
@@ -102,8 +107,8 @@ def block_matmul(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), cp.dtype),
-        scratch_shapes=[pltpu.MemorySpace.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[_MS.VMEM((bm, bn), jnp.float32)],
+        compiler_params=_CP(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

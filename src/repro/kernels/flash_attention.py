@@ -22,6 +22,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params, tpu_memory_space
+
+_MS = tpu_memory_space()
+_CP = tpu_compiler_params()
+
 NEG_INF = -1e30
 
 
@@ -100,16 +105,16 @@ def flash_decode_attention(
             pl.BlockSpec((1, 1, G, d), lambda b, h, s: (b, h, 0, 0)),
             pl.BlockSpec((1, block_s, 1, d), lambda b, h, s: (b, s, h, 0)),
             pl.BlockSpec((1, block_s, 1, d), lambda b, h, s: (b, s, h, 0)),
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
+            pl.BlockSpec(memory_space=_MS.SMEM),
         ],
         out_specs=pl.BlockSpec((1, 1, G, d), lambda b, h, s: (b, h, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, hkv, G, d), q.dtype),
         scratch_shapes=[
-            pltpu.MemorySpace.VMEM((G, 128), jnp.float32),  # m
-            pltpu.MemorySpace.VMEM((G, 128), jnp.float32),  # l
-            pltpu.MemorySpace.VMEM((G, d), jnp.float32),    # acc
+            _MS.VMEM((G, 128), jnp.float32),  # m
+            _MS.VMEM((G, 128), jnp.float32),  # l
+            _MS.VMEM((G, d), jnp.float32),    # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CP(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -25,7 +25,9 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType, Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import make_mesh
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import ARCH_IDS, get_arch
@@ -44,8 +46,7 @@ def make_local_mesh() -> Mesh:
         if n % m == 0 and m <= n:
             model = m
             break
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((n // model, model), ("data", "model"))
 
 
 def main(argv=None) -> dict:

@@ -18,8 +18,8 @@ import json
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
 
+from repro.compat import make_mesh
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_arch
 from repro.distributed import tree_shardings
@@ -28,8 +28,7 @@ from repro.optim import AdamWConfig
 from repro.training import steps as tsteps
 
 ndev, mode, ckpt = int(sys.argv[1]), sys.argv[2], sys.argv[3]
-mesh = jax.make_mesh((ndev // 2, 2), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((ndev // 2, 2), ("data", "model"))
 cfg = get_arch("stablelm-1.6b").smoke().replace(num_heads=4, num_kv_heads=4)
 model = get_model(cfg)
 opt = AdamWConfig()

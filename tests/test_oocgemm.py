@@ -4,9 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import is_in_core, ooc_gemm
+from tests._hypothesis_shim import given, settings, st
+
+from repro.core import is_in_core, ooc_gemm, ooc_syrk
 from repro.core.api import (hclDeviceFactory, hclGetMemSize,
                             hclMatrixPartitioner, hclRuntimeFactory)
 from repro.core.ooc_attention import ooc_attention
@@ -88,8 +89,24 @@ def test_ooc_attention_matches_oracle(rng):
                                rtol=1e-4, atol=1e-4)
 
 
+def test_ooc_attention_narrow_kv_dtype_keeps_f32_accuracy(rng):
+    """A reduced-precision KV cache must not quantize the f32 carry on its
+    way out (regression: the host output buffer briefly took the KV dtype)."""
+    H, hkv, d, S = 16, 4, 64, 1024
+    q = rng.standard_normal((H, d)).astype(np.float32)
+    k = rng.standard_normal((S, hkv, d)).astype(np.float16)
+    v = rng.standard_normal((S, hkv, d)).astype(np.float16)
+    out = ooc_attention(q, k, v, budget_bytes=S * hkv * d * 4 // 3)
+    expect = ref.decode_attention_ref(
+        jnp.asarray(q)[None], jnp.asarray(k).astype(jnp.float32)[None],
+        jnp.asarray(v).astype(jnp.float32)[None], jnp.asarray([S]))[0]
+    assert out.dtype == q.dtype
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_ooc_cholesky(rng):
-    """Paper future-work: blocked Cholesky with the OOC-GEMM trailing
+    """Paper future-work: blocked Cholesky with the OOC-SYRK trailing
     update (repro.core.ooc_factor)."""
     from repro.core.ooc_factor import ooc_cholesky
     n = 320
@@ -101,3 +118,40 @@ def test_ooc_cholesky(rng):
     rel = np.abs(L @ L.T - A).max() / np.abs(A).max()
     assert rel < 1e-5, rel
     assert np.allclose(L, np.tril(L))
+
+
+def test_ooc_cholesky_matches_numpy_oracle(rng):
+    """Element-wise agreement with np.linalg.cholesky, not just L@L^T."""
+    from repro.core.ooc_factor import ooc_cholesky
+    n = 384
+    X = rng.standard_normal((n, n)).astype(np.float32)
+    A = (X @ X.T + n * np.eye(n)).astype(np.float32)
+    L = ooc_cholesky(A, panel=128,
+                     budget_bytes=(3 * n * n * 4) // 5, backend="host")
+    expect = np.linalg.cholesky(A.astype(np.float64))
+    scale = np.abs(expect).max()
+    np.testing.assert_allclose(L / scale, expect / scale,
+                               rtol=0, atol=2e-6)
+
+
+@pytest.mark.parametrize("backend", ["host", "vmem"])
+def test_ooc_syrk_matches_oracle(rng, backend):
+    """The third DSL kernel: blocked SYRK (the Cholesky trailing update) as
+    a first-class PipelineSpec, cross-checked on both single-chip tiers."""
+    n, k = 384, 192
+    P = rng.standard_normal((n, k)).astype(np.float32)
+    C = rng.standard_normal((n, n)).astype(np.float32)
+    budget = (2 * P.nbytes + C.nbytes) // 4  # force out-of-core
+    out = ooc_syrk(P, C, -2.0, 0.5, budget_bytes=budget,
+                   backend=backend, validate=(backend == "host"))
+    expect = np.asarray(ref.gemm_ref(
+        jnp.asarray(P), jnp.asarray(P).T, jnp.asarray(C),
+        alpha=-2.0, beta=0.5))
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-4, atol=1e-4)
+
+
+def test_ooc_syrk_in_core_switch(rng):
+    n, k = 128, 64
+    P = rng.standard_normal((n, k)).astype(np.float32)
+    out = ooc_syrk(P, budget_bytes=1 << 30, backend="host")
+    np.testing.assert_allclose(out, P @ P.T, rtol=1e-4, atol=1e-4)
