@@ -1,0 +1,92 @@
+"""Guard: the heap-based ``simulate()`` stays fast and agrees with its spec.
+
+The autotuner ranks every candidate configuration with ``simulate()`` as the
+cost oracle, so large tuning sweeps put the simulator on the hot path.  The
+lazy-key heap ready queue must (a) produce span-for-span identical results to
+``simulate_reference`` (the original per-pick head scan, kept as the
+executable specification of the greedy rule) and (b) simulate a 64x64-block
+GEMM schedule (~16k ops) well under ``BUDGET_S`` regardless of stream count.
+Hard-fails on either regression.
+
+Writes ``benchmarks/bench_simulate.json`` (CI uploads it as an artifact).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core import (build_gemm_schedule, gpu_like, phi_like, simulate,
+                        simulate_reference, tpu_v5e_vmem)
+from repro.core.partitioner import GemmPartition
+
+BUDGET_S = 5.0
+JSON_PATH = os.path.join(os.path.dirname(__file__), "bench_simulate.json")
+
+
+def _grid(h: int, w: int) -> GemmPartition:
+    return GemmPartition(M=h * 128, N=w * 128, K=256, h=h, w=w,
+                         bm=128, bn=128, bytes_per_el=4, budget=64 * 2**20)
+
+
+def run():
+    rows = []
+
+    # (a) equivalence: heap == scan, span for span, across hw topologies.
+    part = _grid(8, 8)
+    for hw in (gpu_like(), phi_like(nstreams=1), phi_like(nstreams=2),
+               tpu_v5e_vmem()):
+        for ns, nb in ((1, 1), (2, 2), (2, 3), (4, 4)):
+            sched = build_gemm_schedule(part, ns, nb)
+            a = simulate(sched, hw)
+            b = simulate_reference(sched, hw)
+            if (abs(a.makespan - b.makespan) > 1e-12
+                    or a.busy != b.busy
+                    or sorted(a.op_spans) != sorted(b.op_spans)):
+                raise AssertionError(
+                    f"simulate() diverged from simulate_reference on "
+                    f"{hw.name} ns={ns} nbuf={nb}: "
+                    f"{a.makespan} vs {b.makespan}"
+                )
+    rows.append({
+        "name": "simulate_equivalence",
+        "us_per_call": 0.0,
+        "derived": "heap == scan (span-for-span) on 16 schedule x hw combos",
+    })
+
+    # (b) scaling: the ISSUE's 64x64-block grid, increasing stream counts.
+    part = _grid(64, 64)
+    for ns in (2, 4, 8):
+        sched = build_gemm_schedule(part, ns, max(ns, 2))
+        t0 = time.perf_counter()
+        res = simulate(sched, gpu_like())
+        dt = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        simulate_reference(sched, gpu_like())
+        dt_ref = time.perf_counter() - t0
+        n = len(sched.ops)
+        rows.append({
+            "name": f"simulate_64x64_s{ns}",
+            "us_per_call": dt * 1e6,
+            "derived": (f"{n} ops in {dt*1e3:.0f}ms "
+                        f"({n/max(dt,1e-12)/1e3:.0f}k ops/s; "
+                        f"scan {dt_ref*1e3:.0f}ms) "
+                        f"makespan={res.makespan*1e3:.1f}ms"),
+        })
+        if dt > BUDGET_S:
+            raise AssertionError(
+                f"simulate took {dt:.1f}s on a 64x64 grid with {ns} streams "
+                f"({n} ops) — budget is {BUDGET_S}s; the ready-queue "
+                f"regressed"
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    rows = run()
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    with open(JSON_PATH, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"wrote {JSON_PATH}")

@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV:
   bench_loc         — claim C4  (75 % LOC reduction)
   bench_roofline    — §Roofline table from the dry-run artifacts
   bench_validate    — validate_schedule scaling guard (linear-ish)
+  bench_simulate    — simulate() ready-queue guard + reference equivalence
+  bench_tune        — autotuner: tuned vs default makespans (C5 selection)
 """
 
 from __future__ import annotations
@@ -19,12 +21,14 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_loc, bench_overhead, bench_pipeline,
-                            bench_roofline, bench_transition, bench_validate)
+                            bench_roofline, bench_simulate, bench_transition,
+                            bench_tune, bench_validate)
 
     print("name,us_per_call,derived")
     failures = 0
     for mod in (bench_overhead, bench_transition, bench_pipeline,
-                bench_loc, bench_roofline, bench_validate):
+                bench_loc, bench_roofline, bench_validate, bench_simulate,
+                bench_tune):
         try:
             for row in mod.run():
                 derived = str(row["derived"]).replace(",", ";")

@@ -1,0 +1,82 @@
+"""Export an OOC pipeline timeline as chrome://tracing JSON.
+
+Two span sources, one trace format (``repro.core.trace``):
+
+  * ``--mode sim``  — engine-model spans from ``simulate()`` under a named
+    hardware model: what the schedule *predicts* (the C3/C5 overlap story).
+  * ``--mode exec`` — wall-clock spans from ``ScheduleExecutor`` running the
+    schedule on random data with ``record_spans=True``: what this machine
+    *does* (note: recording synchronizes per op, so overlap collapses — use
+    it to inspect op ordering and real per-op costs, not speedups).
+
+Open the output at chrome://tracing or https://ui.perfetto.dev.
+
+Example:
+    PYTHONPATH=src python scripts/export_trace.py --mode sim \
+        --M 2048 --N 2048 --K 1024 --budget-mb 16 --hw gpu -o trace.json
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import (HostOocRuntime, ScheduleExecutor,
+                        build_gemm_schedule, gpu_like, phi_like,
+                        plan_gemm_partition, simulate, tpu_v5e_ici,
+                        tpu_v5e_vmem, write_chrome_trace)
+
+HW = {
+    "gpu": lambda ns: gpu_like(),
+    "phi": lambda ns: phi_like(nstreams=ns),
+    "tpu_vmem": lambda ns: tpu_v5e_vmem(),
+    "tpu_ici": lambda ns: tpu_v5e_ici(),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mode", choices=("sim", "exec"), default="sim")
+    ap.add_argument("--M", type=int, default=2048)
+    ap.add_argument("--N", type=int, default=2048)
+    ap.add_argument("--K", type=int, default=1024)
+    ap.add_argument("--budget-mb", type=float, default=16.0)
+    ap.add_argument("--nstreams", type=int, default=2)
+    ap.add_argument("--nbuf", type=int, default=2)
+    ap.add_argument("--hw", choices=sorted(HW), default="gpu",
+                    help="hardware model for --mode sim")
+    ap.add_argument("-o", "--out", default="trace.json")
+    args = ap.parse_args()
+
+    budget = int(args.budget_mb * 2**20)
+    bpe = 4
+    part = plan_gemm_partition(args.M, args.N, args.K, budget, bpe,
+                               nbuf=args.nbuf, nstreams=args.nstreams)
+    sched = build_gemm_schedule(part, nstreams=args.nstreams, nbuf=args.nbuf)
+    name = (f"gemm {args.M}x{args.N}x{args.K} h{part.h}xw{part.w} "
+            f"s{args.nstreams}b{args.nbuf}")
+
+    if args.mode == "sim":
+        res = simulate(sched, HW[args.hw](args.nstreams))
+        spans = res.op_spans
+        print(f"{name}: {len(sched.ops)} ops, "
+              f"simulated makespan {res.makespan*1e3:.2f} ms on {args.hw}")
+    else:
+        rng = np.random.default_rng(0)
+        A = rng.standard_normal((args.M, args.K)).astype(np.float32)
+        B = rng.standard_normal((args.K, args.N)).astype(np.float32)
+        C = np.zeros((args.M, args.N), dtype=np.float32)
+        ex = ScheduleExecutor(record_spans=True)
+        HostOocRuntime(executor=ex).gemm(A, B, C, 1.0, 0.0, part,
+                                         schedule=sched)
+        spans = ex.last_spans
+        total = max(e for _, _, _, e in spans)
+        print(f"{name}: {len(spans)} ops executed in {total*1e3:.1f} ms wall")
+
+    write_chrome_trace(args.out, spans, process_name=name)
+    print(f"wrote {args.out} — load at chrome://tracing or ui.perfetto.dev")
+
+
+if __name__ == "__main__":
+    main()

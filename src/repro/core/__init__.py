@@ -51,9 +51,11 @@ from repro.core.simulator import (
     gpu_like,
     phi_like,
     simulate,
+    simulate_reference,
     tpu_v5e_ici,
     tpu_v5e_vmem,
 )
+from repro.core.trace import chrome_trace, write_chrome_trace
 from repro.core.streams import (
     BlockRef,
     Device,
@@ -76,10 +78,11 @@ __all__ = [
     "SimResult", "SliceRef", "Stream", "StreamFactory", "StreamedOperand",
     "VmemOocRuntime", "WriteBack", "attention_pipeline_spec",
     "build_attention_schedule", "build_gemm_schedule", "build_syrk_schedule",
-    "build_vendor_schedule", "compile_pipeline", "gemm_pipeline_spec",
-    "gpu_like", "is_in_core", "ooc_attention", "ooc_gemm", "ooc_syrk",
-    "phi_like", "plan_attention_partition", "plan_for_device",
-    "plan_gemm_partition", "register_op_handler", "schedule_stats",
-    "simulate", "syrk_pipeline_spec", "tpu_v5e_ici", "tpu_v5e_vmem",
-    "validate_schedule", "vendor_pipeline_spec",
+    "build_vendor_schedule", "chrome_trace", "compile_pipeline",
+    "gemm_pipeline_spec", "gpu_like", "is_in_core", "ooc_attention",
+    "ooc_gemm", "ooc_syrk", "phi_like", "plan_attention_partition",
+    "plan_for_device", "plan_gemm_partition", "register_op_handler",
+    "schedule_stats", "simulate", "simulate_reference",
+    "syrk_pipeline_spec", "tpu_v5e_ici", "tpu_v5e_vmem",
+    "validate_schedule", "vendor_pipeline_spec", "write_chrome_trace",
 ]

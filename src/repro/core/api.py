@@ -61,8 +61,15 @@ def hclGetMemSize(device: Device) -> int:
 
 
 def hclMatrixPartitioner(M: int, N: int, K: int, dMemSize: int,
-                         bytes_per_el: int = 4) -> GemmPartition:
-    return plan_gemm_partition(M, N, K, dMemSize, bytes_per_el)
+                         bytes_per_el: int = 4,
+                         nbuf: Optional[int] = None,
+                         nstreams: Optional[int] = None) -> GemmPartition:
+    """Partition against the device memory — optionally aware of the actual
+    pipeline depth (``nbuf``/``nstreams``) so deeper pipelines get blocks
+    their larger buffer allocation still fits; default is the paper's fixed
+    2-deep model."""
+    return plan_gemm_partition(M, N, K, dMemSize, bytes_per_el,
+                               nbuf=nbuf, nstreams=nstreams)
 
 
 def hclCompilePipeline(spec: PipelineSpec, nstreams: int = 2,
@@ -78,3 +85,21 @@ class hclScheduleExecutor(ScheduleExecutor):
 
 
 hclRegisterOpHandler = register_op_handler
+
+
+def hclAutoTuner(device: Optional[Device] = None, **kw):
+    """Facade over :class:`repro.tune.AutoTuner` (DESIGN.md §6): calibrate
+    the device once, then dispense cached ``TunedPlan``s — partition
+    geometry, stream count, buffer depth — per problem shape and tier.
+
+        tuner = hclAutoTuner(device)                # calibrates lazily
+        plan = tuner.gemm_plan(M, N, K, hclGetMemSize(device))
+        C = ooc_gemm(A, B, budget_bytes=..., tune="auto", tuner=tuner)
+
+    Resolved lazily: ``repro.tune`` imports ``repro.core`` submodules, so
+    the facade must not import the tuner package at module load."""
+    from repro.tune import AutoTuner
+
+    if device is not None:
+        kw.setdefault("tier", device.name.upper())
+    return AutoTuner(**kw)

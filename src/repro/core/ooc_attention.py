@@ -86,22 +86,41 @@ def ooc_attention(
     nstreams: int = 2,
     nbuf: int = 2,
     validate: bool = False,
+    tune=None,
+    tuner=None,
 ):
     """Single-query (decode-shaped) attention over an out-of-core KV cache.
 
     q: (H, d); k_cache/v_cache: (S, Hkv, d) living in host memory.
     Returns (H, d).
+
+    tune: ``None`` uses the defaults above; ``"auto"`` plans the KV block
+    length, stream count and buffer depth through an
+    :class:`~repro.tune.tuner.AutoTuner` (``tuner`` or the process default),
+    served from the plan cache on repeat calls.
     """
+    if tune not in (None, "auto"):
+        raise ValueError(f"unknown tune mode {tune!r}; expected None/'auto'")
     q = jnp.asarray(q)
     k_cache = np.asarray(k_cache)
     v_cache = np.asarray(v_cache)
     S, hkv, d = k_cache.shape
     H = q.shape[0]
 
-    part = plan_attention_partition(
-        S, hkv, d, budget_bytes,
-        bytes_per_el=np.dtype(k_cache.dtype).itemsize,
-    )
+    if tune == "auto":
+        if tuner is None:
+            from repro.tune import get_default_tuner
+            tuner = get_default_tuner()
+        plan = tuner.attention_plan(
+            S, hkv, d, H, budget_bytes,
+            dtype=np.dtype(k_cache.dtype).name)
+        part = plan.attention_partition()
+        nstreams, nbuf = plan.nstreams, plan.nbuf
+    else:
+        part = plan_attention_partition(
+            S, hkv, d, budget_bytes,
+            bytes_per_el=np.dtype(k_cache.dtype).itemsize,
+        )
     sched = build_attention_schedule(part, hkv, d, H,
                                      nstreams=nstreams, nbuf=nbuf)
     if validate:

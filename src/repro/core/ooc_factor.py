@@ -25,8 +25,13 @@ from repro.core.oocgemm import ooc_syrk
 
 
 def ooc_cholesky(A, panel: int = 256, *, budget_bytes: int,
-                 backend: str = "host") -> np.ndarray:
-    """Lower-triangular Cholesky factor of SPD ``A`` (host-resident)."""
+                 backend: str = "host", tune=None,
+                 tuner=None) -> np.ndarray:
+    """Lower-triangular Cholesky factor of SPD ``A`` (host-resident).
+
+    ``tune="auto"`` forwards to :func:`~repro.core.oocgemm.ooc_syrk`: each
+    trailing-update shape gets its own cached plan (the shapes shrink as
+    the factorization advances, so a handful of plans cover the run)."""
     A = np.array(A, copy=True)
     n = A.shape[0]
     assert A.shape == (n, n), "square SPD input required"
@@ -46,5 +51,6 @@ def ooc_cholesky(A, panel: int = 256, *, budget_bytes: int,
         P = np.ascontiguousarray(A[k1:, k0:k1])
         A[k1:, k1:] = np.asarray(ooc_syrk(
             P, A[k1:, k1:], alpha=-1.0, beta=1.0,
-            budget_bytes=budget_bytes, backend=backend))
+            budget_bytes=budget_bytes, backend=backend,
+            tune=tune, tuner=tuner))
     return np.tril(A)

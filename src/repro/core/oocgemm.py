@@ -35,6 +35,24 @@ def is_in_core(M: int, N: int, K: int, budget_bytes: int,
     return (M * K + K * N + M * N) * bytes_per_el <= budget_bytes
 
 
+def _tuned_gemm_config(tuner, kernel: str, M: int, N: int, K: int,
+                       budget_bytes: int, dtype) -> Tuple[GemmPartition, int, int]:
+    """Resolve (partition, nstreams, nbuf) from the (default) autotuner's
+    plan cache — searched once per (shape, dtype, tier, hardware)."""
+    if tuner is None:
+        from repro.tune import get_default_tuner
+        tuner = get_default_tuner()
+    plan = tuner.gemm_plan(M, N, K, budget_bytes,
+                           dtype=np.dtype(dtype).name, kernel=kernel)
+    if not plan.write_back:
+        # "keep"-mode plans describe resident-C (SUMMA-style) pipelines;
+        # this entry point must land C in host memory
+        raise ValueError(
+            f"tuned plan for {kernel} {(M, N, K)} was searched with "
+            f"write_back=False; ooc_{kernel} requires write-back plans")
+    return plan.gemm_partition(), plan.nstreams, plan.nbuf
+
+
 def ooc_gemm(
     A,
     B,
@@ -49,13 +67,23 @@ def ooc_gemm(
     mesh=None,
     validate: bool = False,
     runtime: Optional[OocRuntime] = None,
+    tune: Optional[str] = None,
+    tuner=None,
 ):
     """Compute ``alpha * A @ B + beta * C`` streaming blocks through a memory
     tier of size ``budget_bytes``.
 
     backend: "host" (schedule-driven block streaming), "vmem" (Pallas kernel),
     "mesh" (SUMMA ring over a mesh axis).
+
+    tune: ``None`` uses the hardcoded defaults above; ``"auto"`` asks an
+    :class:`~repro.tune.tuner.AutoTuner` (``tuner`` or the process default)
+    for a calibrated plan — partition geometry, stream count and buffer
+    depth — served from the plan cache on repeat calls (host backend; other
+    backends plan their own pipelines).
     """
+    if tune not in (None, "auto"):
+        raise ValueError(f"unknown tune mode {tune!r}; expected None/'auto'")
     A = np.asarray(A) if backend == "host" else jnp.asarray(A)
     B = np.asarray(B) if backend == "host" else jnp.asarray(B)
     M, K = A.shape
@@ -78,7 +106,11 @@ def ooc_gemm(
                            jnp.float32(alpha), jnp.float32(beta))
         return np.asarray(out) if backend == "host" else out
 
-    part = plan_gemm_partition(M, N, K, budget_bytes, bpe)
+    if tune == "auto" and backend == "host":
+        part, nstreams, nbuf = _tuned_gemm_config(
+            tuner, "gemm", M, N, K, budget_bytes, A.dtype)
+    else:
+        part = plan_gemm_partition(M, N, K, budget_bytes, bpe)
     if backend == "host":
         sched = plib.build_gemm_schedule(part, nstreams=nstreams, nbuf=nbuf)
         if validate:
@@ -103,6 +135,8 @@ def ooc_syrk(
     nbuf: int = 2,
     validate: bool = False,
     runtime: Optional[OocRuntime] = None,
+    tune: Optional[str] = None,
+    tuner=None,
 ):
     """Compute ``alpha * P @ P^T + beta * C`` out-of-core (blocked SYRK).
 
@@ -113,7 +147,13 @@ def ooc_syrk(
     copy — only individual blocks are transposed in flight.  The vmem and
     in-core paths delegate to the dense GEMM kernel and do materialize the
     transpose on-device.
+
+    tune: as in :func:`ooc_gemm` — ``"auto"`` plans partition/streams/buffers
+    through the autotuner (keyed as the ``syrk`` kernel, since the panel is
+    streamed twice).
     """
+    if tune not in (None, "auto"):
+        raise ValueError(f"unknown tune mode {tune!r}; expected None/'auto'")
     if backend not in ("host", "vmem"):
         raise ValueError(f"unknown backend {backend!r}")
     P = np.asarray(P) if backend == "host" else jnp.asarray(P)
@@ -129,7 +169,11 @@ def ooc_syrk(
                            jnp.float32(alpha), jnp.float32(beta))
         return np.asarray(out) if backend == "host" else out
 
-    part = plan_gemm_partition(n, n, K, budget_bytes, bpe)
+    if tune == "auto" and backend == "host":
+        part, nstreams, nbuf = _tuned_gemm_config(
+            tuner, "syrk", n, n, K, budget_bytes, P.dtype)
+    else:
+        part = plan_gemm_partition(n, n, K, budget_bytes, bpe)
     if backend == "host":
         sched = plib.build_syrk_schedule(part, nstreams=nstreams, nbuf=nbuf)
         if validate:

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 # TPU tiling constants (fp32/bf16 lane/sublane granularity).
 LANE = 128
@@ -52,16 +52,39 @@ class GemmPartition:
     def nblocks(self) -> int:
         return self.h * self.w
 
-    def working_set_bytes(self) -> int:
-        """Bytes resident on-device for the paper's 2-deep pipeline.
+    def working_set_bytes(self, nbuf: Optional[int] = None,
+                          nstreams: Optional[int] = None) -> int:
+        """Bytes resident on-device for the pipeline holding this partition.
 
-        One A slice (bm x K), one B slice (K x bn), and TWO C blocks
-        (bm x bn each) — the block being computed and the block in flight —
-        plus the incoming next A slice (double buffered).
+        With no arguments this is the paper's fixed 2-deep model: one A slice
+        (bm x K) plus its double-buffered successor, one B slice (K x bn),
+        and TWO C blocks (bm x bn) — the block being computed and the block
+        in flight.
+
+        Passing ``nbuf`` (and optionally ``nstreams``) switches to the
+        allocation the compiled pipeline actually makes
+        (:func:`~repro.core.pipeline.compile_pipeline`): ``nbuf`` parity
+        buffers for each of A and C, and a 2-deep B ping-pong regardless of
+        pipeline depth (never deeper than the column count ``w``).  The
+        executor allocates per parity class, so stream count adds no buffers
+        — but a deeper round robin only pays off with buffers to land in, so
+        when only ``nstreams`` is given the depth is ``max(2, nstreams)``:
+        the pipeline's default double buffering, deepened if more streams
+        demand more landing slots.  This is the model the planner must use
+        to stop approving partitions an ``nbuf=3`` schedule overflows.
         """
-        a = 2 * self.bm * self.K          # current + prefetched A slice
-        b = self.K * self.bn              # one B slice (reused down a column)
-        c = 2 * self.bm * self.bn         # two C blocks (paper's constraint)
+        if nbuf is None and nstreams is None:
+            a = 2 * self.bm * self.K      # current + prefetched A slice
+            b = self.K * self.bn          # one B slice (reused down a column)
+            c = 2 * self.bm * self.bn     # two C blocks (paper's constraint)
+            return (a + b + c) * self.bytes_per_el
+        depth = nbuf if nbuf is not None else max(2, nstreams)
+        if depth < 1:
+            raise ValueError(f"buffer depth must be >= 1, got {depth}")
+        b_depth = min(2, self.w) if self.w > 0 else 2
+        a = depth * self.bm * self.K
+        b = b_depth * self.K * self.bn
+        c = depth * self.bm * self.bn
         return (a + b + c) * self.bytes_per_el
 
     def block_rows(self, i: int) -> Tuple[int, int]:
@@ -105,6 +128,8 @@ def plan_gemm_partition(
     bytes_per_el: int = 4,
     align_m: int = SUBLANE,
     align_n: int = LANE,
+    nbuf: Optional[int] = None,
+    nstreams: Optional[int] = None,
 ) -> GemmPartition:
     """Choose (h, w) so the pipeline working set fits ``budget_bytes``.
 
@@ -114,6 +139,11 @@ def plan_gemm_partition(
     efficiency) and prefer splitting M before N, because a B slice is reused
     ``h`` times per column while an A slice is used once — smaller bn raises
     B-transfer cost linearly, smaller bm only shrinks the compute tile.
+
+    ``nbuf``/``nstreams`` select the generalized working-set model of
+    :meth:`GemmPartition.working_set_bytes` so a deeper pipeline (nbuf > 2)
+    gets correspondingly smaller blocks instead of overflowing the budget;
+    the default (both None) keeps the paper's fixed 2-deep model.
 
     Raises ValueError if even the minimum aligned block does not fit — the
     paper's implicit requirement that K itself fits (it never splits K; our
@@ -125,9 +155,15 @@ def plan_gemm_partition(
     if budget_bytes <= 0:
         raise ValueError("budget must be positive")
 
+    def probe(bm: int, bn: int) -> GemmPartition:
+        # carries the real (h, w): the generalized model caps the B
+        # ping-pong at the column count, so a single-column partition must
+        # not be charged for two B slices
+        return GemmPartition(M, N, K, math.ceil(M / bm), math.ceil(N / bn),
+                             bm, bn, bytes_per_el, budget_bytes)
+
     def fits(bm: int, bn: int) -> bool:
-        p = GemmPartition(M, N, K, 0, 0, bm, bn, bytes_per_el, budget_bytes)
-        return p.working_set_bytes() <= budget_bytes
+        return probe(bm, bn).working_set_bytes(nbuf, nstreams) <= budget_bytes
 
     # Start in-core: one block covering everything.
     bm = _align_block(M, M, align_m)
@@ -146,9 +182,7 @@ def plan_gemm_partition(
             target = max(min_bn, _round_up(bn // 2, align_n))
             bn = target if target < bn else bn - align_n
         else:
-            need = GemmPartition(
-                M, N, K, 0, 0, bm, bn, bytes_per_el, budget_bytes
-            ).working_set_bytes()
+            need = probe(bm, bn).working_set_bytes(nbuf, nstreams)
             raise ValueError(
                 f"GEMM {(M, N, K)} cannot fit budget {budget_bytes}B: minimum "
                 f"aligned working set is {need}B (K is never split by the "

@@ -25,7 +25,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, Hashable, Optional, Tuple
+import time
+from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -140,13 +141,23 @@ class ScheduleExecutor:
     in flight) and materializes when its parity buffer is about to be
     overwritten — i.e. the host blocks on block ``idx``'s compute only after
     block ``idx+1``'s transfers were issued, exactly the paper's overlap.
+
+    ``record_spans=True`` timestamps every op into ``last_spans`` as
+    ``(tag, stream, start_s, end_s)`` — the same span shape the simulator
+    emits, so :func:`repro.core.trace.chrome_trace` renders either source.
+    Recording synchronizes each op's written buffers (JAX dispatch is async),
+    so it serializes the pipeline: use it to *inspect* schedules, not to
+    benchmark them.
     """
 
     def __init__(self,
                  handlers: Optional[Dict[str, HandlerFn]] = None,
-                 async_writeback: bool = True):
+                 async_writeback: bool = True,
+                 record_spans: bool = False):
         self.handlers = dict(handlers) if handlers else {}
         self.async_writeback = async_writeback
+        self.record_spans = record_spans
+        self.last_spans: List[Tuple[str, int, float, float]] = []
 
     def _handler(self, ref: BlockRef) -> HandlerFn:
         fn = self.handlers.get(ref.kernel) or _OP_HANDLERS.get(ref.kernel)
@@ -181,8 +192,15 @@ class ScheduleExecutor:
             else:
                 dest[rs:rs + rn] = arr
 
+        trace = self.record_spans
+        if trace:
+            self.last_spans = []
+            t_base = time.perf_counter()
+
         for op in sched.ops:
             ref = op.payload
+            if trace:
+                t0 = time.perf_counter() - t_base
             if op.kind == OpKind.H2D:
                 key = op.buffers_written[0]
                 if key in pending:       # schedule's wC wait point: the
@@ -198,13 +216,21 @@ class ScheduleExecutor:
             elif op.kind == OpKind.D2H:
                 if isinstance(ref, BlockRef):  # finalize handler
                     self._handler(ref)(st, op, ref)
-                    continue
-                key = op.buffers_read[0]
-                if key in pending:
-                    flush(key)
-                pending[key] = (st.bufs[key], ref)
-                if not self.async_writeback:
-                    flush(key)
+                else:
+                    key = op.buffers_read[0]
+                    if key in pending:
+                        flush(key)
+                    pending[key] = (st.bufs[key], ref)
+                    if not self.async_writeback:
+                        flush(key)
+            if trace:
+                sync = [st.bufs[k] for k in op.buffers_written
+                        if k in st.bufs]
+                if op.kind == OpKind.COMPUTE and "carry" in st.scratch:
+                    sync.append(st.scratch["carry"])
+                jax.block_until_ready(sync)
+                self.last_spans.append(
+                    (op.tag, op.stream, t0, time.perf_counter() - t_base))
         for key in list(pending):
             flush(key)
         return st

@@ -18,6 +18,7 @@ Engine semantics follow CUDA stream rules:
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Dict, List, Tuple
 
 from repro.core.streams import Op, OpKind, Schedule
@@ -116,12 +117,120 @@ class SimResult:
     def utilization(self, pool: str) -> float:
         return self.busy.get(pool, 0.0) / self.makespan if self.makespan else 0.0
 
+    def to_chrome_trace(self, process_name: str = "ooc-pipeline") -> dict:
+        """``chrome://tracing`` / Perfetto JSON for ``op_spans`` — one track
+        per stream, so transfer/compute overlap is visually inspectable."""
+        from repro.core.trace import chrome_trace
+        return chrome_trace(self.op_spans, process_name=process_name)
+
 
 def simulate(sched: Schedule, hw: HardwareModel) -> SimResult:
     """Event-driven simulation of ``sched`` under ``hw``.
 
     Deterministic greedy: repeatedly pick, among stream-head ops whose waited
-    events are recorded, the op with the earliest feasible start.
+    events are recorded, the op with the earliest feasible start (ties break
+    to the lowest stream index).
+
+    The ready queue is a lazy-key heap rather than a per-pick rescan of all
+    stream heads, so large tuning sweeps stay fast.  A head enters the heap
+    once all its waited events are recorded, keyed by its feasible start *at
+    push time*; because every component of a feasible start (stream-free
+    time, engine-free times, event times) only grows as ops are placed, a
+    popped key is a lower bound — recompute, re-push if stale, place if
+    exact.  The placed op's true start is then <= every other queued head's,
+    which is exactly the scan's greedy choice (`simulate_reference`, the
+    executable spec this is cross-checked against in
+    ``benchmarks/bench_simulate.py``).
+    """
+    streams = sched.streams
+    heads = [0] * len(streams)
+    stream_free = [0.0] * len(streams)
+    engine_free: Dict[str, List[float]] = {
+        pool: [0.0] * n for pool, n in hw.pools.items()
+    }
+    event_time: Dict[str, float] = {}
+    busy: Dict[str, float] = {pool: 0.0 for pool in hw.pools}
+    spans: List[Tuple[str, int, float, float]] = []
+    remaining = sum(len(s.ops) for s in streams)
+    makespan = 0.0
+
+    # (feasible-start lower bound, stream) heap + event -> blocked streams.
+    ready: List[Tuple[float, int]] = []
+    waiting: Dict[str, List[int]] = {}
+
+    def feasible(si: int) -> Tuple[float, int, Op, str]:
+        op = streams[si].ops[heads[si]]
+        pool = hw.kind_pool[op.kind]
+        free = engine_free[pool]
+        if len(free) == 1:
+            ei = 0
+        else:
+            ei = min(range(len(free)), key=free.__getitem__)
+        start = stream_free[si]
+        if free[ei] > start:
+            start = free[ei]
+        for ev in op.waits:
+            t = event_time[ev.name]
+            if t > start:
+                start = t
+        return start, ei, op, pool
+
+    def enqueue(si: int) -> None:
+        """Push stream ``si``'s head, or park it on its first missing event."""
+        if heads[si] >= len(streams[si].ops):
+            return
+        op = streams[si].ops[heads[si]]
+        for ev in op.waits:
+            if ev.name not in event_time:
+                waiting.setdefault(ev.name, []).append(si)
+                return
+        heapq.heappush(ready, (feasible(si)[0], si))
+
+    for si in range(len(streams)):
+        enqueue(si)
+
+    while remaining:
+        if not ready:
+            raise RuntimeError(
+                "simulator deadlock: no stream head is runnable "
+                "(schedule should have failed validate_schedule)"
+            )
+        key, si = heapq.heappop(ready)
+        start, ei, op, pool = feasible(si)
+        if start > key:  # engine/event state moved since push: stale bound
+            heapq.heappush(ready, (start, si))
+            continue
+        dur = hw.duration(op)
+        end = start + dur
+        engine_free[pool][ei] = end
+        stream_free[si] = end
+        busy[pool] += dur
+        heads[si] += 1
+        remaining -= 1
+        makespan = max(makespan, end)
+        spans.append((op.tag, si, start, end))
+        if op.records is not None:
+            event_time[op.records.name] = end
+            for blocked in waiting.pop(op.records.name, ()):
+                enqueue(blocked)
+        enqueue(si)
+
+    return SimResult(
+        makespan=makespan,
+        busy=busy,
+        op_spans=spans,
+        flops=sched.total_flops(),
+        h2d_bytes=sched.total_bytes(OpKind.H2D),
+        d2h_bytes=sched.total_bytes(OpKind.D2H),
+    )
+
+
+def simulate_reference(sched: Schedule, hw: HardwareModel) -> SimResult:
+    """The original O(n_ops x n_streams) head-scan list scheduler.
+
+    Kept as the executable specification of :func:`simulate`'s greedy rule:
+    ``benchmarks/bench_simulate.py`` asserts span-for-span agreement, and the
+    heap version's docstring argues equivalence against this loop.
     """
     streams = sched.streams
     heads = [0] * len(streams)

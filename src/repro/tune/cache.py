@@ -1,0 +1,111 @@
+"""Plan cache: search once per (problem, dtype, tier, hardware) tuple.
+
+Plans persist as one JSON document mapping cache keys to
+:meth:`~repro.tune.search.TunedPlan.to_json` payloads.  The key format
+(DESIGN.md §6) is::
+
+    <kernel>:<problem dims 'x'-joined>:<dtype>:<tier>:<budget>:<fingerprint>
+
+e.g. ``gemm:8192x8192x8192:float32:HBM:268435456:0f3a9c...`` — everything
+the plan depends on and nothing it doesn't, so a repeat call on the same
+machine is a hit while a different shape, dtype, memory tier, budget or
+backend re-searches.  Writes are atomic (temp file + ``os.replace``) so a
+crashed run never corrupts the store; a corrupt or unreadable store is
+treated as empty rather than fatal (the cache is an accelerator, not a
+dependency).  ``hits``/``misses`` counters make cache behavior assertable
+in tests and visible in benchmarks.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Dict, Optional, Sequence
+
+from repro.tune.search import TunedPlan
+
+_ENV_VAR = "REPRO_TUNE_CACHE"
+
+
+def default_cache_path() -> str:
+    env = os.environ.get(_ENV_VAR)
+    if env:
+        return env
+    base = os.environ.get("XDG_CACHE_HOME",
+                          os.path.join(os.path.expanduser("~"), ".cache"))
+    return os.path.join(base, "repro-tune", "plans.json")
+
+
+class PlanCache:
+    """JSON-file-backed store of :class:`TunedPlan` keyed by problem+hardware."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or default_cache_path()
+        self.hits = 0
+        self.misses = 0
+        self._mem: Optional[Dict[str, dict]] = None
+
+    @staticmethod
+    def key(kernel: str, problem: Sequence[int], dtype: str, tier: str,
+            budget: int, fingerprint: str) -> str:
+        dims = "x".join(str(int(d)) for d in problem)
+        return f"{kernel}:{dims}:{dtype}:{tier}:{int(budget)}:{fingerprint}"
+
+    # -- storage ------------------------------------------------------------
+    def _load(self) -> Dict[str, dict]:
+        if self._mem is None:
+            try:
+                with open(self.path) as f:
+                    data = json.load(f)
+                self._mem = data if isinstance(data, dict) else {}
+            except (OSError, ValueError):
+                self._mem = {}
+        return self._mem
+
+    def _store(self) -> None:
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d or ".", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self._mem, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- API ----------------------------------------------------------------
+    def get(self, key: str) -> Optional[TunedPlan]:
+        raw = self._load().get(key)
+        if raw is None:
+            self.misses += 1
+            return None
+        try:
+            plan = TunedPlan.from_json(raw)
+        except (TypeError, KeyError, ValueError):
+            self.misses += 1   # schema drift: treat as miss, will overwrite
+            return None
+        self.hits += 1
+        return plan
+
+    def put(self, key: str, plan: TunedPlan) -> None:
+        self._load()[key] = plan.to_json()
+        self._store()
+
+    def clear(self) -> None:
+        self._mem = {}
+        try:
+            os.unlink(self.path)
+        except OSError:
+            pass
+
+    def __len__(self) -> int:
+        return len(self._load())
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._load()

@@ -1,0 +1,252 @@
+"""Rank the candidate space with ``simulate()`` as the cost oracle.
+
+Every candidate is compiled by the *production* pipeline compiler
+(:func:`~repro.core.pipeline.compile_pipeline`) and timed under the
+profile's engine model for **that candidate's stream count**
+(:meth:`~repro.tune.calibrate.HardwareProfile.model_for`) — the detail that
+reproduces claim C5: on a shared-engine Phi-like profile a 2-stream model
+splits the compute core at 0.76 efficiency, so 1 stream wins; on a
+GPU-like profile 2 streams hide PCIe behind DGEMM, so 2 wins.  The winner
+is returned as a :class:`TunedPlan`, a JSON-serializable value object the
+plan cache persists.
+
+The search is exhaustive over the (pruned, tens-of-candidates) space and
+fully deterministic: candidates are enumerated in a fixed order and ties
+break toward fewer streams, shallower buffers, then larger blocks —
+identical inputs always produce an identical plan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.partitioner import (AttentionPartition, GemmPartition,
+                                    plan_attention_partition,
+                                    plan_gemm_partition)
+from repro.core.pipeline import (attention_pipeline_spec, compile_pipeline,
+                                 gemm_pipeline_spec, syrk_pipeline_spec)
+from repro.core.simulator import simulate
+from repro.tune.calibrate import HardwareProfile
+from repro.tune.space import attention_search_space, gemm_search_space
+
+Scalar = Union[int, float, bool, str]
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedPlan:
+    """The tuner's output: a complete, executable pipeline configuration.
+
+    ``params`` holds the kernel-specific geometry as a sorted tuple of
+    pairs (``bm``/``bn``/``h``/``w`` for GEMM and SYRK, ``bs``/``nblocks``
+    for attention) so the dataclass stays frozen, hashable and
+    JSON-round-trippable; ``makespan``/``baseline_makespan`` are the
+    predicted seconds for this plan and for the hardcoded default
+    ``(nstreams=2, nbuf=2)`` plan under the same profile.
+    """
+
+    kernel: str                      # "gemm" | "syrk" | "attention"
+    problem: Tuple[int, ...]
+    dtype: str
+    tier: str
+    budget: int
+    nstreams: int
+    nbuf: int
+    write_back: bool
+    params: Tuple[Tuple[str, int], ...]
+    makespan: float
+    baseline_makespan: float
+    model: str
+    fingerprint: str
+
+    def param(self, name: str) -> int:
+        for k, v in self.params:
+            if k == name:
+                return v
+        raise KeyError(name)
+
+    def gemm_partition(self) -> GemmPartition:
+        if self.kernel not in ("gemm", "syrk"):
+            raise ValueError(f"{self.kernel!r} plan has no GEMM partition")
+        M, N, K = self.problem
+        return GemmPartition(
+            M, N, K, self.param("h"), self.param("w"),
+            self.param("bm"), self.param("bn"),
+            np.dtype(self.dtype).itemsize, self.budget)
+
+    def attention_partition(self) -> AttentionPartition:
+        if self.kernel != "attention":
+            raise ValueError(f"{self.kernel!r} plan has no KV partition")
+        S = self.problem[0]
+        return AttentionPartition(
+            S, self.param("bs"), self.param("nblocks"),
+            np.dtype(self.dtype).itemsize, self.budget)
+
+    def to_json(self) -> Dict[str, Scalar]:
+        d = dataclasses.asdict(self)
+        d["problem"] = list(self.problem)
+        d["params"] = {k: v for k, v in self.params}
+        return d
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "TunedPlan":
+        d = dict(d)
+        d["problem"] = tuple(d["problem"])
+        d["params"] = tuple(sorted(d["params"].items()))
+        return cls(**d)
+
+
+def _rank_key(makespan: float, cand_ns: int, cand_nb: int,
+              bm: int, bn: int, idx: int):
+    # ties: fewer streams, shallower buffers, larger blocks, issue order
+    return (makespan, cand_ns, cand_nb, -bm, -bn, idx)
+
+
+def search_gemm(
+    M: int,
+    N: int,
+    K: int,
+    budget_bytes: int,
+    profile: HardwareProfile,
+    *,
+    kernel: str = "gemm",
+    dtype: str = "float32",
+    tier: str = "HBM",
+    fingerprint: str = "",
+    nstreams_options: Sequence[int] = (1, 2),
+    nbuf_options: Sequence[int] = (1, 2, 3),
+    write_back_options: Sequence[bool] = (True,),
+    max_steps: int = 2048,
+) -> TunedPlan:
+    """Exhaustively rank the pruned GEMM/SYRK space under ``profile``.
+
+    Element size derives from ``dtype`` (the plan embeds both; deriving
+    keeps the searched bytes and the reconstructed partition consistent).
+    """
+    if kernel not in ("gemm", "syrk"):
+        raise ValueError(f"search_gemm cannot tune kernel {kernel!r}")
+    if kernel == "syrk" and set(write_back_options) != {True}:
+        # the SYRK spec has no resident-C mode; ranking a policy the
+        # compiled schedule can't express would record a fictional makespan
+        raise ValueError("syrk pipelines always write back; "
+                         "write_back_options must be (True,)")
+    bytes_per_el = np.dtype(dtype).itemsize
+    spec_of = (gemm_pipeline_spec if kernel == "gemm"
+               else lambda part, write_back=True: syrk_pipeline_spec(part))
+    space = gemm_search_space(
+        M, N, K, budget_bytes, bytes_per_el,
+        nstreams_options=nstreams_options, nbuf_options=nbuf_options,
+        write_back_options=write_back_options, max_steps=max_steps)
+    if not space:
+        raise ValueError(
+            f"no feasible pipeline configuration for GEMM {(M, N, K)} "
+            f"within {budget_bytes}B (max_steps={max_steps})")
+
+    best = None
+    best_key = None
+    for idx, cand in enumerate(space):
+        sched = compile_pipeline(spec_of(cand.part, write_back=cand.write_back),
+                                 nstreams=cand.nstreams, nbuf=cand.nbuf)
+        res = simulate(sched, profile.model_for(cand.nstreams))
+        key = _rank_key(res.makespan, cand.nstreams, cand.nbuf,
+                        cand.part.bm, cand.part.bn, idx)
+        if best_key is None or key < best_key:
+            best, best_key = (cand, res), key
+
+    # baseline: the hardcoded default every entry point used before tuning
+    try:
+        dpart = plan_gemm_partition(M, N, K, budget_bytes, bytes_per_el)
+        dres = simulate(compile_pipeline(spec_of(dpart), nstreams=2, nbuf=2),
+                        profile.model_for(2))
+        baseline = dres.makespan
+    except ValueError:
+        baseline = float("inf")
+
+    cand, res = best
+    return TunedPlan(
+        kernel=kernel,
+        problem=(M, N, K),
+        dtype=dtype,
+        tier=tier,
+        budget=budget_bytes,
+        nstreams=cand.nstreams,
+        nbuf=cand.nbuf,
+        write_back=cand.write_back,
+        params=tuple(sorted({
+            "h": cand.part.h, "w": cand.part.w,
+            "bm": cand.part.bm, "bn": cand.part.bn,
+        }.items())),
+        makespan=res.makespan,
+        baseline_makespan=baseline,
+        model=profile.name,
+        fingerprint=fingerprint,
+    )
+
+
+def search_attention(
+    seq_len: int,
+    kv_heads: int,
+    head_dim: int,
+    q_heads: int,
+    budget_bytes: int,
+    profile: HardwareProfile,
+    *,
+    dtype: str = "float16",
+    tier: str = "HBM",
+    fingerprint: str = "",
+    nstreams_options: Sequence[int] = (1, 2),
+    nbuf_options: Sequence[int] = (2, 3),
+    max_steps: int = 4096,
+) -> TunedPlan:
+    """Exhaustively rank KV block length x pipeline shape under ``profile``."""
+    bytes_per_el = np.dtype(dtype).itemsize
+    space = attention_search_space(
+        seq_len, kv_heads, head_dim, budget_bytes, bytes_per_el,
+        nstreams_options=nstreams_options, nbuf_options=nbuf_options,
+        max_steps=max_steps)
+    if not space:
+        raise ValueError(
+            f"no feasible attention configuration for S={seq_len} "
+            f"within {budget_bytes}B")
+
+    best = None
+    best_key = None
+    for idx, cand in enumerate(space):
+        spec = attention_pipeline_spec(cand.part, kv_heads, head_dim, q_heads)
+        res = simulate(compile_pipeline(spec, nstreams=cand.nstreams,
+                                        nbuf=cand.nbuf),
+                       profile.model_for(cand.nstreams))
+        key = _rank_key(res.makespan, cand.nstreams, cand.nbuf,
+                        cand.part.bs, 0, idx)
+        if best_key is None or key < best_key:
+            best, best_key = (cand, res), key
+
+    try:
+        dpart = plan_attention_partition(seq_len, kv_heads, head_dim,
+                                         budget_bytes, bytes_per_el)
+        dspec = attention_pipeline_spec(dpart, kv_heads, head_dim, q_heads)
+        baseline = simulate(compile_pipeline(dspec, nstreams=2, nbuf=2),
+                            profile.model_for(2)).makespan
+    except ValueError:
+        baseline = float("inf")
+
+    cand, res = best
+    return TunedPlan(
+        kernel="attention",
+        problem=(seq_len, kv_heads, head_dim, q_heads),
+        dtype=dtype,
+        tier=tier,
+        budget=budget_bytes,
+        nstreams=cand.nstreams,
+        nbuf=cand.nbuf,
+        write_back=False,
+        params=tuple(sorted({
+            "bs": cand.part.bs, "nblocks": cand.part.nblocks,
+        }.items())),
+        makespan=res.makespan,
+        baseline_makespan=baseline,
+        model=profile.name,
+        fingerprint=fingerprint,
+    )

@@ -1,0 +1,152 @@
+"""AutoTuner — the closed loop: calibrate -> search -> cache -> execute.
+
+One object owns the three pieces: a :class:`~repro.tune.calibrate.\
+HardwareProfile` (measured lazily on first use, or injected for simulation
+studies and tests), a :class:`~repro.tune.cache.PlanCache`, and the search
+options.  Entry points (``ooc_gemm(tune="auto")`` and friends) ask it for a
+plan; repeat calls with the same problem and hardware fingerprint are
+served from the cache without re-searching (``last_from_cache`` and the
+``searches`` counter make that observable).
+
+A module-level default tuner backs ``tune="auto"`` when the caller doesn't
+supply one, so the calibration and cache warm-up cost is paid once per
+process, not per call.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.tune.cache import PlanCache
+from repro.tune.calibrate import (CalibrationResult, HardwareProfile,
+                                  calibrate, hardware_fingerprint)
+from repro.tune.search import TunedPlan, search_attention, search_gemm
+
+
+class AutoTuner:
+    """Plan factory for out-of-core kernels on the current hardware.
+
+    Args:
+      profile: engine model source; None measures the machine on first use.
+      cache: plan store; None uses the default on-disk JSON cache.
+      fingerprint: cache-key hardware identity; None derives it (from the
+        calibration when one runs, else :func:`hardware_fingerprint`).
+      tier: memory-tier name baked into cache keys ("HBM", "VMEM", ...).
+      nstreams_options / nbuf_options / max_steps: search-space bounds.
+    """
+
+    def __init__(
+        self,
+        profile: Optional[HardwareProfile] = None,
+        cache: Optional[PlanCache] = None,
+        fingerprint: Optional[str] = None,
+        tier: str = "HBM",
+        nstreams_options: Sequence[int] = (1, 2),
+        nbuf_options: Sequence[int] = (1, 2, 3),
+        max_steps: int = 2048,
+    ):
+        self._profile = profile
+        self._fingerprint = fingerprint
+        self.cache = cache if cache is not None else PlanCache()
+        self.tier = tier
+        self.nstreams_options = tuple(nstreams_options)
+        self.nbuf_options = tuple(nbuf_options)
+        self.max_steps = max_steps
+        self.calibration: Optional[CalibrationResult] = None
+        self.searches = 0
+        self.last_from_cache = False
+        self._lock = threading.Lock()
+
+    # -- lazy hardware identity --------------------------------------------
+    @property
+    def profile(self) -> HardwareProfile:
+        with self._lock:
+            if self._profile is None:
+                self.calibration = calibrate(tier=self.tier)
+                self._profile = self.calibration.profile
+                if self._fingerprint is None:
+                    self._fingerprint = self.calibration.fingerprint
+            return self._profile
+
+    @property
+    def fingerprint(self) -> str:
+        if self._fingerprint is None:
+            self.profile  # calibration also fixes the fingerprint
+            if self._fingerprint is None:
+                self._fingerprint = hardware_fingerprint()
+        return self._fingerprint
+
+    # -- plans --------------------------------------------------------------
+    def gemm_plan(self, M: int, N: int, K: int, budget_bytes: int,
+                  dtype: str = "float32", kernel: str = "gemm") -> TunedPlan:
+        dtype = np.dtype(dtype).name   # one spelling per dtype in cache keys
+        key = PlanCache.key(kernel, (M, N, K), dtype, self.tier,
+                            budget_bytes, self.fingerprint)
+        plan = self.cache.get(key)
+        if plan is not None:
+            self.last_from_cache = True
+            return plan
+        self.last_from_cache = False
+        self.searches += 1
+        plan = search_gemm(
+            M, N, K, budget_bytes, self.profile,
+            kernel=kernel, dtype=dtype, tier=self.tier,
+            fingerprint=self.fingerprint,
+            nstreams_options=self.nstreams_options,
+            nbuf_options=self.nbuf_options,
+            max_steps=self.max_steps)
+        self.cache.put(key, plan)
+        return plan
+
+    def syrk_plan(self, n: int, K: int, budget_bytes: int,
+                  dtype: str = "float32") -> TunedPlan:
+        return self.gemm_plan(n, n, K, budget_bytes, dtype=dtype,
+                              kernel="syrk")
+
+    def attention_plan(self, seq_len: int, kv_heads: int, head_dim: int,
+                       q_heads: int, budget_bytes: int,
+                       dtype: str = "float16") -> TunedPlan:
+        dtype = np.dtype(dtype).name
+        key = PlanCache.key("attention", (seq_len, kv_heads, head_dim,
+                                          q_heads), dtype, self.tier,
+                            budget_bytes, self.fingerprint)
+        plan = self.cache.get(key)
+        if plan is not None:
+            self.last_from_cache = True
+            return plan
+        self.last_from_cache = False
+        self.searches += 1
+        plan = search_attention(
+            seq_len, kv_heads, head_dim, q_heads, budget_bytes,
+            self.profile,
+            dtype=dtype, tier=self.tier,
+            fingerprint=self.fingerprint,
+            nstreams_options=self.nstreams_options,
+            nbuf_options=tuple(nb for nb in self.nbuf_options if nb >= 2)
+            or (2,),
+            max_steps=max(self.max_steps, 4096))
+        self.cache.put(key, plan)
+        return plan
+
+
+_default_tuner: Optional[AutoTuner] = None
+_default_lock = threading.Lock()
+
+
+def get_default_tuner() -> AutoTuner:
+    """Process-wide tuner backing ``tune="auto"`` (calibrates lazily once)."""
+    global _default_tuner
+    with _default_lock:
+        if _default_tuner is None:
+            _default_tuner = AutoTuner()
+        return _default_tuner
+
+
+def set_default_tuner(tuner: Optional[AutoTuner]) -> None:
+    """Swap (or with None, reset) the process-wide default tuner."""
+    global _default_tuner
+    with _default_lock:
+        _default_tuner = tuner

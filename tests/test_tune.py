@@ -1,0 +1,261 @@
+"""Autotuner: C5 stream selection, determinism, plan cache, calibration.
+
+The acceptance bar (ISSUE 2): with a phi-like calibrated model the tuner
+selects ``nstreams=1``, with a gpu-like model ``nstreams=2``; the tuned
+plan's simulated makespan never exceeds the hardcoded ``(nstreams=2,
+nbuf=2)`` default's; and a repeat ``tune="auto"`` call with the same
+fingerprint is served from the plan cache without re-searching.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (build_gemm_schedule, gpu_like, ooc_attention,
+                        ooc_gemm, phi_like, plan_gemm_partition, simulate,
+                        simulate_reference, tpu_v5e_vmem)
+from repro.core.ooc_factor import ooc_cholesky
+from repro.tune import (AutoTuner, PlanCache, TunedPlan, calibrate,
+                        gemm_search_space, gpu_profile, hardware_fingerprint,
+                        phi_profile, search_gemm, tpu_v5e_profile)
+
+# paper §VI regime for C5: compute-dominated large square DGEMM
+C5_SHAPE = (8192, 8192, 8192)
+C5_BUDGET = (3 * 8192 * 8192) * 8 // 6
+C5_OPTS = dict(nbuf_options=(1, 2), max_steps=128)  # small space, fast tests
+
+
+def _tuner(profile, tmp_path, name="fp", **kw):
+    opts = {**C5_OPTS, **kw}
+    return AutoTuner(profile=profile,
+                     cache=PlanCache(str(tmp_path / f"{name}.json")),
+                     fingerprint=name, **opts)
+
+
+# --------------------------------------------------------------- profiles
+def test_canned_profiles_match_simulator_models():
+    """phi/gpu/tpu profiles must instantiate the simulator's hand-entered
+    models engine-for-engine — same pools, rates, split behavior."""
+    for ns in (1, 2):
+        got = phi_profile().model_for(ns)
+        want = phi_like(nstreams=ns)
+        assert got.pools == want.pools
+        assert got.kind_pool == want.kind_pool
+        assert got.compute_split == want.compute_split
+        assert got.split_efficiency == want.split_efficiency
+        assert (got.h2d_bw, got.d2h_bw, got.flops) == \
+            (want.h2d_bw, want.d2h_bw, want.flops)
+    assert gpu_profile().model_for(2).pools == gpu_like().pools
+    assert gpu_profile().model_for(1).pools == gpu_like().pools
+    tpu = tpu_v5e_profile().model_for(2)
+    assert tpu.per_op_overhead == tpu_v5e_vmem().per_op_overhead
+    assert tpu.pools == {"h2d": 1, "d2h": 1, "exec": 1}
+
+
+# ------------------------------------------------------------------- space
+def test_space_respects_generalized_working_set():
+    M, N, K = 2048, 2048, 1024
+    budget = (M * K + K * N + M * N) * 4 // 4
+    space = gemm_search_space(M, N, K, budget, 4, nbuf_options=(1, 2, 3))
+    assert space, "space must not be empty"
+    for cand in space:
+        # every searched candidate honors the nbuf-aware model; only the
+        # marked legacy baseline may exceed it (its 2-deep model
+        # undercounts the B ping-pong — the very bug being fixed)
+        if not cand.baseline:
+            assert cand.part.working_set_bytes(cand.nbuf, cand.nstreams) \
+                <= budget
+    # the hardcoded default configuration is always a candidate
+    default = plan_gemm_partition(M, N, K, budget, 4)
+    assert any(c.baseline and c.part.bm == default.bm
+               and c.part.bn == default.bn
+               and c.nstreams == 2 and c.nbuf == 2 for c in space)
+
+
+# ---------------------------------------------------------- C5 acceptance
+def test_c5_phi_selects_one_stream_gpu_two(tmp_path):
+    M, N, K = C5_SHAPE
+    phi = _tuner(phi_profile(), tmp_path, "phi")
+    gpu = _tuner(gpu_profile(), tmp_path, "gpu")
+
+    p_phi = phi.gemm_plan(M, N, K, C5_BUDGET, dtype="float64")
+    p_gpu = gpu.gemm_plan(M, N, K, C5_BUDGET, dtype="float64")
+
+    assert p_phi.nstreams == 1, "Phi-like hardware must run 1 stream (C5)"
+    assert p_gpu.nstreams == 2, "GPU-like hardware must run 2 streams (C5)"
+    # tuned never loses to the hardcoded default under the same oracle
+    assert p_phi.makespan <= p_phi.baseline_makespan + 1e-12
+    assert p_gpu.makespan <= p_gpu.baseline_makespan + 1e-12
+
+    # repeat call with the same fingerprint: cache hit, no re-search
+    for tuner, plan in ((phi, p_phi), (gpu, p_gpu)):
+        searches = tuner.searches
+        again = tuner.gemm_plan(M, N, K, C5_BUDGET, dtype="float64")
+        assert tuner.last_from_cache
+        assert tuner.searches == searches
+        assert again == plan
+
+
+def test_c5_baseline_agrees_with_simulator():
+    """The plan's recorded makespans are honest ``simulate()`` numbers."""
+    M, N, K = C5_SHAPE
+    plan = search_gemm(M, N, K, C5_BUDGET, phi_profile(), dtype="float64",
+                       fingerprint="x", **C5_OPTS)
+    dpart = plan_gemm_partition(M, N, K, C5_BUDGET, 8)
+    want = simulate(build_gemm_schedule(dpart, 2, 2),
+                    phi_profile().model_for(2)).makespan
+    assert plan.baseline_makespan == pytest.approx(want, rel=1e-12)
+    got = simulate(build_gemm_schedule(plan.gemm_partition(),
+                                       plan.nstreams, plan.nbuf),
+                   phi_profile().model_for(plan.nstreams)).makespan
+    assert plan.makespan == pytest.approx(got, rel=1e-12)
+
+
+# ------------------------------------------------------------ determinism
+def test_search_is_deterministic(tmp_path):
+    M, N, K = 4096, 4096, 2048
+    budget = (M * K + K * N + M * N) * 4 // 5
+    a = search_gemm(M, N, K, budget, gpu_profile(), fingerprint="fp")
+    b = search_gemm(M, N, K, budget, gpu_profile(), fingerprint="fp")
+    assert a == b
+    # and through fresh tuners with separate caches
+    t1 = _tuner(gpu_profile(), tmp_path, "d1")
+    t2 = _tuner(gpu_profile(), tmp_path, "d2")
+    p1 = t1.gemm_plan(M, N, K, budget)
+    p2 = t2.gemm_plan(M, N, K, budget)
+    assert dataclasses_equal_except_fingerprint(p1, p2)
+
+
+def dataclasses_equal_except_fingerprint(a: TunedPlan, b: TunedPlan) -> bool:
+    import dataclasses
+    da, db = dataclasses.asdict(a), dataclasses.asdict(b)
+    da.pop("fingerprint"), db.pop("fingerprint")
+    return da == db
+
+
+def test_plan_json_roundtrip(tmp_path):
+    plan = search_gemm(1024, 1024, 512, 2_000_000, gpu_profile(),
+                       fingerprint="rt")
+    again = TunedPlan.from_json(json.loads(json.dumps(plan.to_json())))
+    assert again == plan
+    part = again.gemm_partition()
+    assert (part.bm, part.bn, part.h, part.w) == \
+        (plan.param("bm"), plan.param("bn"), plan.param("h"), plan.param("w"))
+
+
+# -------------------------------------------------------------- plan cache
+def test_cache_persists_across_tuner_instances(tmp_path):
+    path = tmp_path / "shared.json"
+    t1 = AutoTuner(profile=gpu_profile(), cache=PlanCache(str(path)),
+                   fingerprint="same", **C5_OPTS)
+    p1 = t1.gemm_plan(2048, 2048, 1024, 4_000_000)
+    assert t1.searches == 1
+    # a new process (modeled by a new tuner) reads the same store
+    t2 = AutoTuner(profile=gpu_profile(), cache=PlanCache(str(path)),
+                   fingerprint="same", **C5_OPTS)
+    p2 = t2.gemm_plan(2048, 2048, 1024, 4_000_000)
+    assert t2.searches == 0 and t2.last_from_cache and p2 == p1
+    # different fingerprint = different hardware: must re-search
+    t3 = AutoTuner(profile=gpu_profile(), cache=PlanCache(str(path)),
+                   fingerprint="other", **C5_OPTS)
+    t3.gemm_plan(2048, 2048, 1024, 4_000_000)
+    assert t3.searches == 1
+
+
+def test_cache_key_format():
+    key = PlanCache.key("gemm", (8192, 8192, 8192), "float32", "HBM",
+                        1 << 28, "abcd1234")
+    assert key == "gemm:8192x8192x8192:float32:HBM:268435456:abcd1234"
+
+
+def test_corrupt_cache_is_treated_as_empty(tmp_path):
+    path = tmp_path / "broken.json"
+    path.write_text("{not json")
+    cache = PlanCache(str(path))
+    assert cache.get("anything") is None
+    assert cache.misses == 1
+
+
+# ------------------------------------------------- tune="auto" end to end
+def test_ooc_gemm_tune_auto_matches_oracle(rng, tmp_path):
+    M, N, K = 640, 512, 256
+    A = rng.standard_normal((M, K)).astype(np.float32)
+    B = rng.standard_normal((K, N)).astype(np.float32)
+    C = rng.standard_normal((M, N)).astype(np.float32)
+    budget = (A.nbytes + B.nbytes + C.nbytes) // 4
+    tuner = _tuner(gpu_profile(), tmp_path, "e2e")
+    out = ooc_gemm(A, B, C, 1.5, -0.5, budget_bytes=budget,
+                   tune="auto", tuner=tuner)
+    expect = 1.5 * (A.astype(np.float64) @ B) - 0.5 * C
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+    assert tuner.searches == 1
+    out2 = ooc_gemm(A, B, C, 1.5, -0.5, budget_bytes=budget,
+                    tune="auto", tuner=tuner)
+    assert tuner.searches == 1 and tuner.last_from_cache
+    np.testing.assert_allclose(out2, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_ooc_gemm_rejects_unknown_tune_mode(rng):
+    A = np.zeros((64, 64), np.float32)
+    with pytest.raises(ValueError, match="tune mode"):
+        ooc_gemm(A, A, budget_bytes=1 << 20, tune="bogus")
+
+
+def test_ooc_attention_tune_auto_matches_default(rng, tmp_path):
+    S, hkv, d, H = 2048, 4, 64, 8
+    q = rng.standard_normal((H, d)).astype(np.float32)
+    k = rng.standard_normal((S, hkv, d)).astype(np.float32)
+    v = rng.standard_normal((S, hkv, d)).astype(np.float32)
+    budget = k.nbytes // 4
+    tuner = _tuner(gpu_profile(), tmp_path, "attn")
+    tuned = np.asarray(ooc_attention(q, k, v, budget_bytes=budget,
+                                     tune="auto", tuner=tuner))
+    default = np.asarray(ooc_attention(q, k, v, budget_bytes=budget))
+    np.testing.assert_allclose(tuned, default, rtol=2e-3, atol=2e-3)
+    assert tuner.searches == 1
+    ooc_attention(q, k, v, budget_bytes=budget, tune="auto", tuner=tuner)
+    assert tuner.searches == 1 and tuner.last_from_cache
+
+
+def test_ooc_cholesky_tune_auto(rng, tmp_path):
+    n = 320
+    Mx = rng.standard_normal((n, n))
+    spd = (Mx @ Mx.T + n * np.eye(n)).astype(np.float32)
+    tuner = _tuner(gpu_profile(), tmp_path, "chol")
+    L = ooc_cholesky(spd, panel=128, budget_bytes=spd.nbytes // 3,
+                     tune="auto", tuner=tuner)
+    np.testing.assert_allclose(L @ L.T, spd, rtol=2e-3, atol=2e-3)
+
+
+# ------------------------------------------------------------- calibration
+def test_calibrate_measures_this_machine():
+    res = calibrate(small=(128, 512), large=(1024, 512), gemm_n=256,
+                    repeats=2)
+    prof = res.profile
+    for rate in (prof.h2d_bw, prof.d2h_bw, prof.flops):
+        assert np.isfinite(rate) and rate > 0
+    assert 0 < prof.per_op_overhead <= 1e-3
+    assert res.fingerprint == hardware_fingerprint()
+    # the fitted profile instantiates usable engine models
+    for ns in (1, 2):
+        model = prof.model_for(ns)
+        assert model.pools and model.flops > 0
+
+
+def test_fingerprint_is_stable():
+    assert hardware_fingerprint() == hardware_fingerprint()
+    assert len(hardware_fingerprint()) == 16
+
+
+# ------------------------------------- heap simulator equals its reference
+def test_simulate_heap_matches_reference():
+    part = plan_gemm_partition(1024, 1024, 512, 2_000_000, 4)
+    for ns, nb in ((1, 1), (2, 2), (2, 3), (3, 2)):
+        sched = build_gemm_schedule(part, ns, nb)
+        for hw in (gpu_like(), phi_like(nstreams=ns), tpu_v5e_vmem()):
+            a = simulate(sched, hw)
+            b = simulate_reference(sched, hw)
+            assert a.makespan == pytest.approx(b.makespan, abs=1e-15)
+            assert a.busy == b.busy
+            assert sorted(a.op_spans) == sorted(b.op_spans)
