@@ -1,0 +1,119 @@
+"""Hybrid co-scheduling: balanced split vs. best single device (engine model).
+
+The hybrid subsystem's reason to exist: under the paper's own canned
+profiles (K40c-like GPU + Xeon-Phi-like, the HCLServer testbed pair) a
+profile-proportionally split GEMM must finish *strictly* earlier than the
+best single-device tuned plan — otherwise co-execution is noise.  This
+bench asserts, for an 8192^3 double-precision GEMM:
+
+  * ``simulate_hybrid()`` of the balanced ``HybridPlan`` has strictly lower
+    makespan than the best single-device ``tune.search`` plan;
+  * the per-device predicted finish times agree within the balancer
+    tolerance (the functional-performance-model fixed point was reached);
+  * each device keeps its C5 stream selection inside the hybrid plan
+    (gpu-like 2 streams, phi-like 1).
+
+``--smoke`` shrinks the search space for CI; either way results land in
+``benchmarks/bench_hybrid.json`` (uploaded as a CI artifact alongside the
+tuner's).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.hybrid import DeviceSpec, plan_hybrid_gemm, simulate_hybrid
+from repro.tune import gpu_profile, phi_profile
+from repro.tune.search import search_gemm
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "bench_hybrid.json")
+
+# paper §VI regime: compute-dominated large square DGEMM (full / 6 budget),
+# the same shape bench_tune.py ranks per device — here split across both.
+M, N, K, BPE = 8192, 8192, 8192, 8
+TOLERANCE = 0.05
+
+EXPECT_STREAMS = {"gpu-like": 2, "phi-like": 1}
+
+
+def run(smoke: bool = False):
+    rows = []
+    budget = (M * K + K * N + M * N) * BPE // 6
+    opts = dict(nbuf_options=(1, 2) if smoke else (1, 2, 3),
+                max_steps=128 if smoke else 2048)
+    devices = [DeviceSpec("gpu0", gpu_profile(), budget),
+               DeviceSpec("phi0", phi_profile(), budget)]
+
+    singles = {}
+    for dev in devices:
+        plan = search_gemm(M, N, K, dev.budget_bytes, dev.profile,
+                           dtype="float64", fingerprint=f"bench-{dev.name}",
+                           **opts)
+        singles[dev.name] = plan.makespan
+        rows.append({
+            "name": f"hybrid_single_{dev.name}",
+            "us_per_call": plan.makespan * 1e6,
+            "derived": (f"{dev.profile.name} alone: s{plan.nstreams}"
+                        f"b{plan.nbuf}, {plan.param('h')}x{plan.param('w')}"
+                        f" blocks"),
+        })
+    best_single = min(singles.values())
+    best_name = min(singles, key=singles.get)
+
+    hplan = plan_hybrid_gemm(M, N, K, devices, dtype="float64",
+                             tolerance=TOLERANCE, **opts)
+    sim = simulate_hybrid(hplan)
+    bal = hplan.balance
+    shares = {dp.device.name: dp.length for dp in hplan.device_plans}
+    rows.append({
+        "name": "hybrid_balanced",
+        "us_per_call": sim.makespan * 1e6,
+        "derived": (f"split {shares} in {bal.iterations} iters "
+                    f"(spread {bal.spread:.3f}); "
+                    f"{best_single / sim.makespan:.2f}x vs best single "
+                    f"({best_name})"),
+    })
+
+    if not (sim.makespan < best_single):
+        raise AssertionError(
+            f"hybrid makespan {sim.makespan}s does not beat best single "
+            f"device {best_name} at {best_single}s")
+    if bal.spread > TOLERANCE:
+        raise AssertionError(
+            f"per-device predicted finish times disagree beyond tolerance: "
+            f"spread {bal.spread} > {TOLERANCE}")
+    for dp in hplan.device_plans:
+        want = EXPECT_STREAMS.get(dp.device.profile.name)
+        if want is not None and dp.plan.nstreams != want:
+            raise AssertionError(
+                f"C5 regression inside hybrid plan: {dp.device.name} "
+                f"picked nstreams={dp.plan.nstreams}, paper says {want}")
+    # simulate_hybrid re-derives exactly what the balance loop predicted
+    for dp, got in zip(hplan.device_plans, sim.device_makespans):
+        if abs(got - dp.plan.makespan) > 1e-12:
+            raise AssertionError(
+                f"simulate_hybrid disagrees with tuned plan on "
+                f"{dp.device.name}: {got} vs {dp.plan.makespan}")
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny search space for CI (seconds; same asserts)")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for row in rows:
+        derived = str(row["derived"]).replace(",", ";")
+        print(f"{row['name']},{row['us_per_call']:.1f},{derived}")
+    with open(JSON_PATH, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"wrote {JSON_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV:
   bench_validate    — validate_schedule scaling guard (linear-ish)
   bench_simulate    — simulate() ready-queue guard + reference equivalence
   bench_tune        — autotuner: tuned vs default makespans (C5 selection)
+  bench_hybrid      — hybrid co-scheduling: balanced split vs best single
+                      device (beyond paper; DESIGN.md §7)
 """
 
 from __future__ import annotations
@@ -20,15 +22,15 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_loc, bench_overhead, bench_pipeline,
-                            bench_roofline, bench_simulate, bench_transition,
-                            bench_tune, bench_validate)
+    from benchmarks import (bench_hybrid, bench_loc, bench_overhead,
+                            bench_pipeline, bench_roofline, bench_simulate,
+                            bench_transition, bench_tune, bench_validate)
 
     print("name,us_per_call,derived")
     failures = 0
     for mod in (bench_overhead, bench_transition, bench_pipeline,
                 bench_loc, bench_roofline, bench_validate, bench_simulate,
-                bench_tune):
+                bench_tune, bench_hybrid):
         try:
             for row in mod.run():
                 derived = str(row["derived"]).replace(",", ";")

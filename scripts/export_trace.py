@@ -1,6 +1,6 @@
 """Export an OOC pipeline timeline as chrome://tracing JSON.
 
-Two span sources, one trace format (``repro.core.trace``):
+Three span sources, one trace format (``repro.core.trace``):
 
   * ``--mode sim``  — engine-model spans from ``simulate()`` under a named
     hardware model: what the schedule *predicts* (the C3/C5 overlap story).
@@ -8,6 +8,10 @@ Two span sources, one trace format (``repro.core.trace``):
     schedule on random data with ``record_spans=True``: what this machine
     *does* (note: recording synchronizes per op, so overlap collapses — use
     it to inspect op ordering and real per-op costs, not speedups).
+  * ``--mode hybrid`` — engine-model spans of a GEMM co-scheduled across
+    the canned gpu+phi profile pair: one trace *process* (lane-group, pid =
+    device index) per device, so the balanced concurrent timelines sit side
+    by side without stream-id collisions.
 
 Open the output at chrome://tracing or https://ui.perfetto.dev.
 
@@ -19,6 +23,7 @@ Example:
 from __future__ import annotations
 
 import argparse
+import json
 
 import numpy as np
 
@@ -35,9 +40,31 @@ HW = {
 }
 
 
+def _hybrid_mode(args) -> None:
+    from repro.hybrid import DeviceSpec, plan_hybrid_gemm, simulate_hybrid
+    from repro.tune import gpu_profile, phi_profile
+
+    budget = int(args.budget_mb * 2**20)
+    devices = [DeviceSpec("gpu0", gpu_profile(), budget),
+               DeviceSpec("phi0", phi_profile(), budget)]
+    hplan = plan_hybrid_gemm(args.M, args.N, args.K, devices,
+                             nbuf_options=(1, 2), max_steps=512)
+    sim = simulate_hybrid(hplan)
+    for dp, span in zip(hplan.device_plans, sim.device_makespans):
+        print(f"  {dp.device.name}: rows [{dp.start}, "
+              f"{dp.start + dp.length}) s{dp.plan.nstreams}b{dp.plan.nbuf} "
+              f"-> {span*1e3:.2f} ms")
+    with open(args.out, "w") as f:
+        json.dump(sim.to_chrome_trace(), f)
+    print(f"hybrid gemm {args.M}x{args.N}x{args.K}: aggregate makespan "
+          f"{sim.makespan*1e3:.2f} ms across {len(hplan.device_plans)} "
+          f"devices (one lane-group each)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--mode", choices=("sim", "exec"), default="sim")
+    ap.add_argument("--mode", choices=("sim", "exec", "hybrid"),
+                    default="sim")
     ap.add_argument("--M", type=int, default=2048)
     ap.add_argument("--N", type=int, default=2048)
     ap.add_argument("--K", type=int, default=1024)
@@ -48,6 +75,12 @@ def main() -> None:
                     help="hardware model for --mode sim")
     ap.add_argument("-o", "--out", default="trace.json")
     args = ap.parse_args()
+
+    if args.mode == "hybrid":
+        _hybrid_mode(args)
+        print(f"wrote {args.out} — load at chrome://tracing or "
+              f"ui.perfetto.dev")
+        return
 
     budget = int(args.budget_mb * 2**20)
     bpe = 4

@@ -44,6 +44,7 @@ from repro.core.runtime import (
     ScheduleExecutor,
     VmemOocRuntime,
     register_op_handler,
+    register_runtime,
 )
 from repro.core.simulator import (
     HardwareModel,
@@ -55,7 +56,12 @@ from repro.core.simulator import (
     tpu_v5e_ici,
     tpu_v5e_vmem,
 )
-from repro.core.trace import chrome_trace, write_chrome_trace
+from repro.core.trace import (
+    chrome_trace,
+    chrome_trace_groups,
+    write_chrome_trace,
+    write_chrome_trace_groups,
+)
 from repro.core.streams import (
     BlockRef,
     Device,
@@ -78,11 +84,12 @@ __all__ = [
     "SimResult", "SliceRef", "Stream", "StreamFactory", "StreamedOperand",
     "VmemOocRuntime", "WriteBack", "attention_pipeline_spec",
     "build_attention_schedule", "build_gemm_schedule", "build_syrk_schedule",
-    "build_vendor_schedule", "chrome_trace", "compile_pipeline",
-    "gemm_pipeline_spec", "gpu_like", "is_in_core", "ooc_attention",
-    "ooc_gemm", "ooc_syrk", "phi_like", "plan_attention_partition",
-    "plan_for_device", "plan_gemm_partition", "register_op_handler",
-    "schedule_stats", "simulate", "simulate_reference",
-    "syrk_pipeline_spec", "tpu_v5e_ici", "tpu_v5e_vmem",
-    "validate_schedule", "vendor_pipeline_spec", "write_chrome_trace",
+    "build_vendor_schedule", "chrome_trace", "chrome_trace_groups",
+    "compile_pipeline", "gemm_pipeline_spec", "gpu_like", "is_in_core",
+    "ooc_attention", "ooc_gemm", "ooc_syrk", "phi_like",
+    "plan_attention_partition", "plan_for_device", "plan_gemm_partition",
+    "register_op_handler", "register_runtime", "schedule_stats", "simulate",
+    "simulate_reference", "syrk_pipeline_spec", "tpu_v5e_ici",
+    "tpu_v5e_vmem", "validate_schedule", "vendor_pipeline_spec",
+    "write_chrome_trace", "write_chrome_trace_groups",
 ]

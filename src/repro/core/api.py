@@ -31,6 +31,7 @@ _TIER_BYTES = {
     "VMEM": 128 * 2**20,   # v5e VMEM
     "HBM": 16 * 2**30,     # v5e HBM
     "MESH": 16 * 2**30,    # per-shard HBM (aggregate = pod)
+    "HYBRID": 0,           # composite: memory is the member devices' sum
 }
 
 
@@ -46,8 +47,9 @@ class hclDeviceFactory:
 
 class hclRuntimeFactory:
     @staticmethod
-    def create(device: Device, mesh: Optional[Mesh] = None) -> OocRuntime:
-        return RuntimeFactory.create(device, mesh)
+    def create(device: Device, mesh: Optional[Mesh] = None,
+               **kw) -> OocRuntime:
+        return RuntimeFactory.create(device, mesh, **kw)
 
 
 class hclStreamFactory:
@@ -85,6 +87,24 @@ class hclScheduleExecutor(ScheduleExecutor):
 
 
 hclRegisterOpHandler = register_op_handler
+
+
+def hclHybridRuntime(devices, **kw):
+    """Facade over :class:`repro.hybrid.HybridOocRuntime` (DESIGN.md §7):
+    one kernel call co-scheduled across a heterogeneous device set, load
+    balanced by calibrated profiles.
+
+        gpu = DeviceSpec("gpu0", gpu_profile(), 2 * 2**30)
+        phi = DeviceSpec("phi0", phi_profile(), 2 * 2**30)
+        rt = hclHybridRuntime([gpu, phi])
+        C = rt.gemm(A, B, C, alpha, beta)
+
+    ``devices`` is a sequence of :class:`~repro.hybrid.DeviceSpec` (or bare
+    ``(name, profile, budget_bytes)`` tuples).  Resolved lazily —
+    ``repro.hybrid`` imports ``repro.tune``, which imports this package."""
+    from repro.hybrid import HybridOocRuntime
+
+    return HybridOocRuntime(devices, **kw)
 
 
 def hclAutoTuner(device: Optional[Device] = None, **kw):

@@ -88,6 +88,8 @@ def ooc_attention(
     validate: bool = False,
     tune=None,
     tuner=None,
+    devices=None,
+    tolerance=None,
 ):
     """Single-query (decode-shaped) attention over an out-of-core KV cache.
 
@@ -98,6 +100,13 @@ def ooc_attention(
     length, stream count and buffer depth through an
     :class:`~repro.tune.tuner.AutoTuner` (``tuner`` or the process default),
     served from the plan cache on repeat calls.
+
+    devices: a set of :class:`~repro.hybrid.DeviceSpec` co-executes the
+    query across all of them — the KV cache is split into contiguous
+    position chunks sized so calibrated profiles predict equal finish
+    times, each device folds its chunk into an online-softmax partial, and
+    the partials merge exactly.  Budgets come from the specs, so
+    ``budget_bytes`` is ignored on this path.
     """
     if tune not in (None, "auto"):
         raise ValueError(f"unknown tune mode {tune!r}; expected None/'auto'")
@@ -106,6 +115,17 @@ def ooc_attention(
     v_cache = np.asarray(v_cache)
     S, hkv, d = k_cache.shape
     H = q.shape[0]
+
+    if devices is not None:
+        from repro.hybrid import plan_hybrid_attention, run_hybrid_attention
+
+        kw = {} if tolerance is None else {"tolerance": tolerance}
+        hplan = plan_hybrid_attention(
+            S, hkv, d, H, devices,
+            dtype=np.dtype(k_cache.dtype).name, **kw)
+        out, _ = run_hybrid_attention(q, k_cache, v_cache, hplan,
+                                      validate=validate)
+        return jnp.asarray(out).astype(q.dtype)
 
     if tune == "auto":
         if tuner is None:

@@ -10,7 +10,7 @@ must cost 0 %.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +53,10 @@ def _tuned_gemm_config(tuner, kernel: str, M: int, N: int, K: int,
     return plan.gemm_partition(), plan.nstreams, plan.nbuf
 
 
+def _hybrid_kwargs(tolerance: Optional[float]) -> dict:
+    return {} if tolerance is None else {"tolerance": tolerance}
+
+
 def ooc_gemm(
     A,
     B,
@@ -69,6 +73,8 @@ def ooc_gemm(
     runtime: Optional[OocRuntime] = None,
     tune: Optional[str] = None,
     tuner=None,
+    devices: Optional[Sequence] = None,
+    tolerance: Optional[float] = None,
 ):
     """Compute ``alpha * A @ B + beta * C`` streaming blocks through a memory
     tier of size ``budget_bytes``.
@@ -81,9 +87,28 @@ def ooc_gemm(
     for a calibrated plan — partition geometry, stream count and buffer
     depth — served from the plan cache on repeat calls (host backend; other
     backends plan their own pipelines).
+
+    devices: a set of :class:`~repro.hybrid.DeviceSpec` (or ``(name,
+    profile, budget_bytes)`` tuples) co-executes the one GEMM across all of
+    them: C's rows are split so the calibrated profiles predict equal
+    per-device finish times (``tolerance`` overrides the balancer default),
+    each band runs its own tuned schedule concurrently, and the disjoint
+    bands merge into one result.  Per-device budgets come from the specs,
+    so ``budget_bytes`` and ``backend`` are ignored on this path.
     """
     if tune not in (None, "auto"):
         raise ValueError(f"unknown tune mode {tune!r}; expected None/'auto'")
+    if devices is not None:
+        from repro.hybrid import plan_hybrid_gemm, run_hybrid_gemm
+
+        A = np.asarray(A)
+        B = np.asarray(B)
+        hplan = plan_hybrid_gemm(
+            A.shape[0], B.shape[1], A.shape[1], devices,
+            dtype=np.dtype(A.dtype).name, **_hybrid_kwargs(tolerance))
+        out, _ = run_hybrid_gemm(A, B, C, alpha, beta, hplan,
+                                 validate=validate)
+        return out
     A = np.asarray(A) if backend == "host" else jnp.asarray(A)
     B = np.asarray(B) if backend == "host" else jnp.asarray(B)
     M, K = A.shape
@@ -137,6 +162,8 @@ def ooc_syrk(
     runtime: Optional[OocRuntime] = None,
     tune: Optional[str] = None,
     tuner=None,
+    devices: Optional[Sequence] = None,
+    tolerance: Optional[float] = None,
 ):
     """Compute ``alpha * P @ P^T + beta * C`` out-of-core (blocked SYRK).
 
@@ -151,9 +178,23 @@ def ooc_syrk(
     tune: as in :func:`ooc_gemm` — ``"auto"`` plans partition/streams/buffers
     through the autotuner (keyed as the ``syrk`` kernel, since the panel is
     streamed twice).
+
+    devices: as in :func:`ooc_gemm` — co-execute across a heterogeneous
+    device set, splitting C's rows by calibrated profile (each band's
+    transposed panel still streams the full P, block by block).
     """
     if tune not in (None, "auto"):
         raise ValueError(f"unknown tune mode {tune!r}; expected None/'auto'")
+    if devices is not None:
+        from repro.hybrid import plan_hybrid_syrk, run_hybrid_syrk
+
+        P = np.asarray(P)
+        hplan = plan_hybrid_syrk(
+            P.shape[0], P.shape[1], devices,
+            dtype=np.dtype(P.dtype).name, **_hybrid_kwargs(tolerance))
+        out, _ = run_hybrid_syrk(P, C, alpha, beta, hplan,
+                                 validate=validate)
+        return out
     if backend not in ("host", "vmem"):
         raise ValueError(f"unknown backend {backend!r}")
     P = np.asarray(P) if backend == "host" else jnp.asarray(P)

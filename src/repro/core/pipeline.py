@@ -425,7 +425,8 @@ def attention_pipeline_spec(
 
 
 def syrk_pipeline_spec(part: GemmPartition,
-                       alpha_tag: str = "P") -> PipelineSpec:
+                       alpha_tag: str = "P",
+                       pt_source: Optional[str] = None) -> PipelineSpec:
     """Blocked SYRK ``C <- alpha * P @ P^T + beta * C`` as a spec.
 
     The Cholesky trailing update, first-class: the same ``dgemm`` handler as
@@ -433,9 +434,16 @@ def syrk_pipeline_spec(part: GemmPartition,
     transposed row slices (``Pt``, the B role) — with no host-side ``P.T``
     materialization.  ``part`` partitions the symmetric C (M = N = trailing
     dim, K = panel width).
+
+    ``pt_source`` names a *separate* host operand the transposed slices
+    stream from (default: the same ``alpha_tag`` array).  The hybrid
+    co-scheduler uses this for row-band SYRK: each device's ``Pr`` reads its
+    band of the panel while ``Pt`` still spans every row of the full panel,
+    so the band operand and the full panel must be distinct host arrays.
     """
     bpe = part.bytes_per_el
     rows, cols, flops = _block_accessors(part)
+    pt_src = pt_source or alpha_tag
 
     pr = StreamedOperand(
         name="Pr", nblocks=part.nblocks, block_of=lambda s: s,
@@ -444,7 +452,7 @@ def syrk_pipeline_spec(part: GemmPartition,
     )
     pt = StreamedOperand(
         name="Pt", nblocks=part.w, block_of=lambda s: s // part.h,
-        slice_of=lambda j: SliceRef(alpha_tag, j, rows=part.block_cols(j),
+        slice_of=lambda j: SliceRef(pt_src, j, rows=part.block_cols(j),
                                     transpose=True),
         bytes_of=lambda j: part.block_cols(j)[1] * part.K * bpe,
         nbuf=2,

@@ -25,8 +25,9 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import importlib
 import time
-from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
+from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple, Type
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +48,15 @@ class OocRuntime:
              part: GemmPartition, **kw):
         raise NotImplementedError
 
+    @classmethod
+    def from_device(cls, device: Device, *, mesh: Optional[Mesh] = None,
+                    **kw) -> "OocRuntime":
+        """Factory hook :class:`RuntimeFactory` calls for the registered
+        tier; override when construction needs more than the device tuple
+        (the mesh runtime needs a jax Mesh, the hybrid composite a device
+        set)."""
+        return cls(device=device, **kw)
+
     # hcl-style helpers shared by backends ------------------------------------
     def mem_size(self) -> int:  # hclGetMemSize
         return self.device.mem_bytes
@@ -54,6 +64,34 @@ class OocRuntime:
     def device_synchronize(self, *arrays) -> None:  # hclDeviceSynchronize
         for a in arrays:
             jax.block_until_ready(a)
+
+
+# ===========================================================================
+# Runtime registry — tiers self-register instead of being if/elif'd
+# ===========================================================================
+_RUNTIME_REGISTRY: Dict[str, Type[OocRuntime]] = {}
+
+# Tiers whose runtime lives outside core (imported on first use so core
+# stays cycle-free: the hybrid composite pulls in repro.tune which in turn
+# imports repro.core).
+_LAZY_RUNTIME_MODULES: Dict[str, str] = {"HYBRID": "repro.hybrid.executor"}
+
+
+def register_runtime(name: str) -> Callable[[Type[OocRuntime]],
+                                            Type[OocRuntime]]:
+    """Class decorator registering an :class:`OocRuntime` under tier ``name``.
+
+    ``RuntimeFactory.create`` dispatches ``Device.name`` through this
+    registry via the class's :meth:`OocRuntime.from_device` hook, so new
+    tiers (and composites like the hybrid runtime) plug in without editing
+    the factory.
+    """
+
+    def deco(cls: Type[OocRuntime]) -> Type[OocRuntime]:
+        _RUNTIME_REGISTRY[name.upper()] = cls
+        return cls
+
+    return deco
 
 
 @functools.partial(jax.jit, static_argnames=("transpose",))
@@ -254,6 +292,7 @@ def _dgemm_handler(st: ExecState, op: Op, ref: BlockRef) -> None:
     )
 
 
+@register_runtime("HBM")
 class HostOocRuntime(OocRuntime):
     """Host-driven block streaming: builds (or accepts) a pipeline schedule
     and hands it to the shared :class:`ScheduleExecutor` — no private
@@ -301,6 +340,7 @@ class HostOocRuntime(OocRuntime):
         return out
 
 
+@register_runtime("VMEM")
 class VmemOocRuntime(OocRuntime):
     """HBM->VMEM tier: delegates to the Pallas block-matmul kernel, which IS
     the paper's pipeline compiled into the chip (Mosaic double-buffers the
@@ -331,6 +371,7 @@ class VmemOocRuntime(OocRuntime):
         )
 
 
+@register_runtime("MESH")
 class MeshOocRuntime(OocRuntime):
     """Mesh tier: SUMMA ring over ICI.
 
@@ -346,6 +387,13 @@ class MeshOocRuntime(OocRuntime):
         self.mesh = mesh
         self.axis = axis
         self.device = device or Device("MESH", 0, 16 * 2**30)
+
+    @classmethod
+    def from_device(cls, device: Device, *, mesh: Optional[Mesh] = None,
+                    **kw) -> "MeshOocRuntime":
+        if mesh is None:
+            raise ValueError("MESH runtime needs a jax Mesh")
+        return cls(mesh, device=device, **kw)
 
     def gemm(self, A, B, C, alpha, beta, part=None, overlap: bool = True, **kw):
         mesh, axis = self.mesh, self.axis
@@ -398,21 +446,27 @@ class MeshOocRuntime(OocRuntime):
 
 
 class RuntimeFactory:
-    """``hclRuntimeFactory``: device tuple -> runtime."""
-
-    _BACKENDS = {"HBM": HostOocRuntime, "VMEM": VmemOocRuntime}
+    """``hclRuntimeFactory``: device tuple -> runtime, via the declarative
+    registry populated by :func:`register_runtime`.  Extra keyword arguments
+    are forwarded to the tier's ``from_device`` hook (e.g. ``devices=[...]``
+    for the hybrid composite)."""
 
     @staticmethod
-    def create(device: Device, mesh: Optional[Mesh] = None) -> OocRuntime:
-        if device.name.upper() == "MESH":
-            if mesh is None:
-                raise ValueError("MESH runtime needs a jax Mesh")
-            return MeshOocRuntime(mesh, device=device)
-        try:
-            cls = RuntimeFactory._BACKENDS[device.name.upper()]
-        except KeyError:
+    def create(device: Device, mesh: Optional[Mesh] = None,
+               **kw) -> OocRuntime:
+        name = device.name.upper()
+        cls = _RUNTIME_REGISTRY.get(name)
+        if cls is None and name in _LAZY_RUNTIME_MODULES:
+            importlib.import_module(_LAZY_RUNTIME_MODULES[name])
+            cls = _RUNTIME_REGISTRY.get(name)
+        if cls is None:
             raise ValueError(
-                f"unknown device type {device.name!r}; expected one of "
-                f"{sorted(RuntimeFactory._BACKENDS)} or MESH"
-            ) from None
-        return cls(device)
+                f"unknown device type {device.name!r}; registered tiers: "
+                f"{RuntimeFactory.registered()}"
+            )
+        return cls.from_device(device, mesh=mesh, **kw)
+
+    @staticmethod
+    def registered() -> List[str]:
+        """Tier names ``create`` accepts (registered + lazily importable)."""
+        return sorted(set(_RUNTIME_REGISTRY) | set(_LAZY_RUNTIME_MODULES))

@@ -117,11 +117,14 @@ class SimResult:
     def utilization(self, pool: str) -> float:
         return self.busy.get(pool, 0.0) / self.makespan if self.makespan else 0.0
 
-    def to_chrome_trace(self, process_name: str = "ooc-pipeline") -> dict:
+    def to_chrome_trace(self, process_name: str = "ooc-pipeline",
+                        pid: int = 0) -> dict:
         """``chrome://tracing`` / Perfetto JSON for ``op_spans`` — one track
-        per stream, so transfer/compute overlap is visually inspectable."""
+        per stream, so transfer/compute overlap is visually inspectable.
+        ``pid`` places the spans in a specific lane group when several
+        devices' results are merged into one trace."""
         from repro.core.trace import chrome_trace
-        return chrome_trace(self.op_spans, process_name=process_name)
+        return chrome_trace(self.op_spans, process_name=process_name, pid=pid)
 
 
 def simulate(sched: Schedule, hw: HardwareModel) -> SimResult:

@@ -12,12 +12,18 @@ A span is ``(tag, stream, start_s, end_s)``; streams become trace threads so
 each stream renders as its own track.  Categories derive from the schedule's
 tag grammar (``S(..)`` H2D, ``R(..)`` D2H, anything else compute), which is
 also what Perfetto's search/filter keys on.
+
+Multi-device runs (the hybrid co-scheduler) have one span list *per device*,
+each with its own stream indices starting at 0; merging them onto one pid
+would collide the tracks.  :func:`chrome_trace_groups` gives every device
+its own trace *process* (``pid`` = device index), so Perfetto renders one
+lane-group per device and identical stream ids never collide.
 """
 
 from __future__ import annotations
 
 import json
-from typing import Iterable, Tuple
+from typing import Iterable, List, Sequence, Tuple
 
 Span = Tuple[str, int, float, float]
 
@@ -30,18 +36,17 @@ def _category(tag: str) -> str:
     return "compute"
 
 
-def chrome_trace(spans: Iterable[Span],
-                 process_name: str = "ooc-pipeline") -> dict:
-    """Spans -> a ``chrome://tracing`` JSON object (complete "X" events,
-    microsecond timestamps, one thread per stream)."""
+def _group_events(spans: Iterable[Span], process_name: str,
+                  pid: int) -> List[dict]:
+    """Events for one span source under one trace process."""
     spans = list(spans)
     events = [{
-        "name": "process_name", "ph": "M", "pid": 0, "tid": 0,
+        "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
         "args": {"name": process_name},
     }]
     for tid in sorted({s[1] for s in spans}):
         events.append({
-            "name": "thread_name", "ph": "M", "pid": 0, "tid": tid,
+            "name": "thread_name", "ph": "M", "pid": pid, "tid": tid,
             "args": {"name": f"stream {tid}"},
         })
     for tag, stream, start, end in spans:
@@ -51,9 +56,30 @@ def chrome_trace(spans: Iterable[Span],
             "ph": "X",
             "ts": start * 1e6,
             "dur": max(end - start, 0.0) * 1e6,
-            "pid": 0,
+            "pid": pid,
             "tid": stream,
         })
+    return events
+
+
+def chrome_trace(spans: Iterable[Span],
+                 process_name: str = "ooc-pipeline",
+                 pid: int = 0) -> dict:
+    """Spans -> a ``chrome://tracing`` JSON object (complete "X" events,
+    microsecond timestamps, one thread per stream)."""
+    return {"traceEvents": _group_events(spans, process_name, pid),
+            "displayTimeUnit": "ms"}
+
+
+def chrome_trace_groups(
+        groups: Sequence[Tuple[str, Iterable[Span]]]) -> dict:
+    """``[(device_name, spans), ...]`` -> one trace with a process (lane
+    group) per device: ``pid`` is the device's position in ``groups``, so
+    spans from concurrently recorded executors — whose stream ids all start
+    at 0 — land on separate tracks instead of colliding."""
+    events: List[dict] = []
+    for pid, (name, spans) in enumerate(groups):
+        events.extend(_group_events(spans, name, pid))
     return {"traceEvents": events, "displayTimeUnit": "ms"}
 
 
@@ -61,3 +87,9 @@ def write_chrome_trace(path: str, spans: Iterable[Span],
                        process_name: str = "ooc-pipeline") -> None:
     with open(path, "w") as f:
         json.dump(chrome_trace(spans, process_name=process_name), f)
+
+
+def write_chrome_trace_groups(
+        path: str, groups: Sequence[Tuple[str, Iterable[Span]]]) -> None:
+    with open(path, "w") as f:
+        json.dump(chrome_trace_groups(groups), f)

@@ -1,0 +1,337 @@
+"""Co-execution: run per-device schedules concurrently, merge the results.
+
+Each active device of a :class:`~repro.hybrid.plan.HybridPlan` gets its own
+compiled schedule (the *same* ``compile_pipeline`` output the tuner ranked)
+and its own :class:`~repro.core.runtime.ScheduleExecutor`, driven from a
+thread pool.  Merging is kernel-specific but always exact:
+
+  * GEMM — devices own disjoint C row bands; each executor writes its band
+    of the output array in place, so the merge is free.
+  * SYRK — same row-band split; the transposed panel streams from the full
+    host matrix (``syrk_pipeline_spec(pt_source=...)``) while each band's
+    row slices stream from its own span.
+  * attention — each device folds its KV chunk into an un-normalized
+    online-softmax partial ``(m, l, acc)`` (the ``attn_partial`` finalize
+    handler below); partials combine with the standard flash-attention
+    merge, which is algebraically exact.
+
+:func:`simulate_hybrid` predicts the co-executed makespan by simulating
+every device's schedule under its own engine model — devices share nothing,
+so the aggregate makespan is the slowest device's — and exports one
+Chrome-trace lane-group per device (pid = device index).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.pipeline import (attention_pipeline_spec, compile_pipeline,
+                                 gemm_pipeline_spec, syrk_pipeline_spec)
+from repro.core.runtime import (ExecState, OocRuntime, ScheduleExecutor,
+                                register_op_handler, register_runtime)
+from repro.core.simulator import SimResult, simulate
+from repro.core.streams import (BlockRef, Device, Op, Schedule,
+                                validate_schedule)
+from repro.core.trace import Span, chrome_trace_groups
+from repro.hybrid.balance import DeviceSpec
+from repro.hybrid.plan import (DevicePlan, HybridPlan, _as_device_specs,
+                               plan_hybrid_attention, plan_hybrid_gemm,
+                               plan_hybrid_syrk)
+
+# Host-operand name the SYRK transposed panel streams from in hybrid mode
+# (each band's row slices stream from the band operand "P" instead).
+_SYRK_FULL_PANEL = "Pfull"
+
+SpanGroups = List[Tuple[str, List[Span]]]
+
+
+@register_op_handler("attn_partial")
+def _attn_partial_handler(st: ExecState, op: Op, ref: BlockRef) -> None:
+    """Finalize one device's KV chunk as an *un-normalized* partial: land
+    the raw online-softmax carry (m, l, acc) in host buffers for the
+    cross-device merge (contrast ``attn_out``, which normalizes)."""
+    m, l, acc = st.scratch["carry"]
+    st.outputs["m"][...] = np.asarray(m)
+    st.outputs["l"][...] = np.asarray(l)
+    st.outputs["acc"][...] = np.asarray(acc)
+
+
+def merge_attention_partials(
+        partials: Sequence[Tuple[np.ndarray, np.ndarray, np.ndarray]]
+) -> np.ndarray:
+    """Exact flash-attention combine of per-chunk (m, l, acc) partials."""
+    m_star = np.max(np.stack([m for m, _, _ in partials]), axis=0)
+    l_star = np.zeros_like(partials[0][1])
+    acc_star = np.zeros_like(partials[0][2])
+    for m, l, acc in partials:
+        scale = np.exp(m - m_star)
+        l_star += l * scale
+        acc_star += acc * scale[:, None]
+    return acc_star / l_star[:, None]
+
+
+def device_schedule(hplan: HybridPlan, dp: DevicePlan) -> Schedule:
+    """Compile one device's sub-schedule — the identical spec/shape the
+    tuner's search simulated, so executed and predicted pipelines agree."""
+    plan = dp.plan
+    if hplan.kernel == "gemm":
+        if not plan.write_back:
+            raise ValueError("hybrid GEMM requires write-back sub-plans")
+        spec = gemm_pipeline_spec(plan.gemm_partition())
+    elif hplan.kernel == "syrk":
+        spec = syrk_pipeline_spec(plan.gemm_partition(),
+                                  pt_source=_SYRK_FULL_PANEL)
+    elif hplan.kernel == "attention":
+        _, kv_heads, head_dim, q_heads = plan.problem
+        spec = attention_pipeline_spec(plan.attention_partition(),
+                                       kv_heads, head_dim, q_heads)
+        spec = dataclasses.replace(
+            spec,
+            writeback=dataclasses.replace(spec.writeback,
+                                          kernel="attn_partial",
+                                          out="partial"))
+    else:
+        raise ValueError(f"unknown hybrid kernel {hplan.kernel!r}")
+    return compile_pipeline(spec, nstreams=plan.nstreams, nbuf=plan.nbuf)
+
+
+def _run_concurrent(jobs) -> list:
+    """Run one job per device concurrently (inline when there is only one:
+    no pool overhead for the degenerate single-device plan)."""
+    if len(jobs) == 1:
+        return [jobs[0]()]
+    with ThreadPoolExecutor(max_workers=len(jobs)) as pool:
+        return [f.result() for f in [pool.submit(j) for j in jobs]]
+
+
+def _execute(hplan: HybridPlan, make_io, ctx: Dict,
+             record_spans: bool, validate: bool) -> SpanGroups:
+    """Shared driver: per device, build (operands, outputs) via ``make_io``
+    and run the compiled sub-schedule on a private executor."""
+
+    def job(dp: DevicePlan):
+        sched = device_schedule(hplan, dp)
+        if validate:
+            validate_schedule(sched)
+        ex = ScheduleExecutor(record_spans=record_spans)
+        operands, outputs = make_io(dp)
+        ex.run(sched, operands=operands, outputs=outputs, ctx=ctx)
+        return dp.device.name, list(ex.last_spans)
+
+    return _run_concurrent([
+        (lambda dp=dp: job(dp)) for dp in hplan.device_plans])
+
+
+def run_hybrid_gemm(A, B, C, alpha: float, beta: float, hplan: HybridPlan,
+                    *, record_spans: bool = False,
+                    validate: bool = False) -> Tuple[np.ndarray, SpanGroups]:
+    """Co-execute ``alpha * A @ B + beta * C`` per the plan's row bands.
+
+    Each device streams its band of A and C plus the whole B; bands are
+    disjoint views of one output array, so the merge is the writes
+    themselves.  Returns ``(C_out, [(device_name, spans), ...])``.
+    """
+    A = np.asarray(A)
+    B = np.asarray(B)
+    M, K = A.shape
+    _, N = B.shape
+    if tuple(hplan.problem) != (M, N, K):
+        raise ValueError(
+            f"plan is for {hplan.problem}, operands are {(M, N, K)}")
+    if C is None:
+        C = np.zeros((M, N), dtype=A.dtype)
+        beta = 0.0
+    out = np.array(C, copy=True)
+
+    def make_io(dp: DevicePlan):
+        lo, hi = dp.start, dp.start + dp.length
+        return ({"A": A[lo:hi], "B": B}, {"C": out[lo:hi]})
+
+    groups = _execute(hplan, make_io, {"alpha": alpha, "beta": beta},
+                      record_spans, validate)
+    return out, groups
+
+
+def run_hybrid_syrk(P, C, alpha: float, beta: float, hplan: HybridPlan,
+                    *, record_spans: bool = False,
+                    validate: bool = False) -> Tuple[np.ndarray, SpanGroups]:
+    """Co-execute ``alpha * P @ P^T + beta * C`` per the plan's row bands."""
+    P = np.asarray(P)
+    n, K = P.shape
+    if tuple(hplan.problem) != (n, n, K):
+        raise ValueError(
+            f"plan is for {hplan.problem}, panel is {(n, n, K)}")
+    if C is None:
+        C = np.zeros((n, n), dtype=P.dtype)
+        beta = 0.0
+    out = np.array(C, copy=True)
+
+    def make_io(dp: DevicePlan):
+        lo, hi = dp.start, dp.start + dp.length
+        return ({"P": P[lo:hi], _SYRK_FULL_PANEL: P}, {"C": out[lo:hi]})
+
+    groups = _execute(hplan, make_io, {"alpha": alpha, "beta": beta},
+                      record_spans, validate)
+    return out, groups
+
+
+def run_hybrid_attention(q, k_cache, v_cache, hplan: HybridPlan,
+                         *, record_spans: bool = False,
+                         validate: bool = False
+                         ) -> Tuple[np.ndarray, SpanGroups]:
+    """Co-execute decode attention: each device folds its KV chunk into a
+    partial, merged exactly on the host.  Returns the f32 (H, d) output."""
+    import jax.numpy as jnp
+
+    k_cache = np.asarray(k_cache)
+    v_cache = np.asarray(v_cache)
+    S, hkv, d = k_cache.shape
+    H = q.shape[0]
+    if tuple(hplan.problem) != (S, hkv, d, H):
+        raise ValueError(
+            f"plan is for {hplan.problem}, operands are {(S, hkv, d, H)}")
+    q = jnp.asarray(q)
+    parts: Dict[str, Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+
+    def make_io(dp: DevicePlan):
+        lo, hi = dp.start, dp.start + dp.length
+        partial = (np.zeros((H,), np.float32), np.zeros((H,), np.float32),
+                   np.zeros((H, d), np.float32))
+        parts[dp.device.name] = partial
+        return ({"K": k_cache[lo:hi], "V": v_cache[lo:hi]},
+                {"m": partial[0], "l": partial[1], "acc": partial[2]})
+
+    groups = _execute(hplan, make_io, {"q": q}, record_spans, validate)
+    out = merge_attention_partials(
+        [parts[dp.device.name] for dp in hplan.device_plans])
+    return out, groups
+
+
+# ===========================================================================
+# Prediction
+# ===========================================================================
+@dataclasses.dataclass
+class HybridSimResult:
+    """Aggregate engine-model prediction for a co-executed plan."""
+
+    makespan: float                                   # slowest device
+    per_device: Tuple[Tuple[str, SimResult], ...]     # (name, SimResult)
+
+    @property
+    def device_makespans(self) -> Tuple[float, ...]:
+        return tuple(r.makespan for _, r in self.per_device)
+
+    def to_chrome_trace(self) -> dict:
+        """One lane-group (trace process, pid = device index) per device."""
+        return chrome_trace_groups(
+            [(name, res.op_spans) for name, res in self.per_device])
+
+
+def simulate_hybrid(hplan: HybridPlan) -> HybridSimResult:
+    """Predict the co-executed makespan: simulate each device's compiled
+    sub-schedule under its own ``profile.model_for(nstreams)``.  Devices
+    share no engine, so they run truly concurrently and the aggregate
+    makespan is the max — the number bench_hybrid holds against the best
+    single-device tuned plan."""
+    per = []
+    for dp in hplan.device_plans:
+        sched = device_schedule(hplan, dp)
+        res = simulate(sched,
+                       dp.device.profile.model_for(dp.plan.nstreams))
+        per.append((dp.device.name, res))
+    return HybridSimResult(
+        makespan=max(r.makespan for _, r in per),
+        per_device=tuple(per))
+
+
+# ===========================================================================
+# The composite runtime (registered tier "HYBRID")
+# ===========================================================================
+@register_runtime("HYBRID")
+class HybridOocRuntime(OocRuntime):
+    """``hclRuntime`` composite: one kernel call, a set of devices.
+
+    Construct with the device set (plus optional planning knobs); every
+    kernel call balances, tunes and co-executes, caching nothing across
+    calls except what ``plan_hybrid_*`` memoizes internally.  ``last_plan``
+    and ``last_span_groups`` expose the most recent plan and (when
+    ``record_spans=True``) the per-device wall-clock spans for tracing.
+    """
+
+    def __init__(self, devices: Sequence[Union[DeviceSpec, Tuple]],
+                 device: Optional[Device] = None,
+                 tolerance: float = 0.05,
+                 max_iters: int = 16,
+                 nstreams_options: Sequence[int] = (1, 2),
+                 nbuf_options: Sequence[int] = (1, 2, 3),
+                 max_steps: int = 2048):
+        self.devices = _as_device_specs(devices)
+        self.device = device or Device(
+            "HYBRID", 0, sum(d.budget_bytes for d in self.devices))
+        self.plan_opts = dict(
+            tolerance=tolerance, max_iters=max_iters,
+            nstreams_options=tuple(nstreams_options),
+            nbuf_options=tuple(nbuf_options), max_steps=max_steps)
+        self.last_plan: Optional[HybridPlan] = None
+        self.last_span_groups: SpanGroups = []
+
+    @classmethod
+    def from_device(cls, device: Device, *, mesh=None, devices=None,
+                    **kw) -> "HybridOocRuntime":
+        if not devices:
+            raise ValueError(
+                "HYBRID runtime needs devices=[DeviceSpec, ...] "
+                "(name, profile, budget_bytes per member)")
+        specs = _as_device_specs(devices)
+        if device.mem_bytes <= 0:
+            # hclDeviceFactory's HYBRID placeholder carries no size of its
+            # own: the composite's memory is the member budgets' sum
+            device = dataclasses.replace(
+                device, mem_bytes=sum(d.budget_bytes for d in specs))
+        return cls(specs, device=device, **kw)
+
+    def gemm(self, A, B, C, alpha: float, beta: float, part=None,
+             plan: Optional[HybridPlan] = None,
+             record_spans: bool = False, **kw) -> np.ndarray:
+        A = np.asarray(A)
+        B = np.asarray(B)
+        plan = plan or plan_hybrid_gemm(
+            A.shape[0], B.shape[1], A.shape[1], self.devices,
+            dtype=np.dtype(A.dtype).name, **self.plan_opts)
+        self.last_plan = plan
+        out, self.last_span_groups = run_hybrid_gemm(
+            A, B, C, alpha, beta, plan, record_spans=record_spans)
+        return out
+
+    def syrk(self, P, C, alpha: float, beta: float, part=None,
+             plan: Optional[HybridPlan] = None,
+             record_spans: bool = False, **kw) -> np.ndarray:
+        P = np.asarray(P)
+        plan = plan or plan_hybrid_syrk(
+            P.shape[0], P.shape[1], self.devices,
+            dtype=np.dtype(P.dtype).name, **self.plan_opts)
+        self.last_plan = plan
+        out, self.last_span_groups = run_hybrid_syrk(
+            P, C, alpha, beta, plan, record_spans=record_spans)
+        return out
+
+    def attention(self, q, k_cache, v_cache,
+                  plan: Optional[HybridPlan] = None,
+                  record_spans: bool = False, **kw) -> np.ndarray:
+        k_cache = np.asarray(k_cache)
+        S, hkv, d = k_cache.shape
+        opts = dict(self.plan_opts)
+        opts["nbuf_options"] = tuple(
+            nb for nb in opts["nbuf_options"] if nb >= 2) or (2,)
+        opts["max_steps"] = max(opts["max_steps"], 4096)
+        plan = plan or plan_hybrid_attention(
+            S, hkv, d, np.asarray(q).shape[0], self.devices,
+            dtype=np.dtype(k_cache.dtype).name, **opts)
+        self.last_plan = plan
+        out, self.last_span_groups = run_hybrid_attention(
+            q, k_cache, v_cache, plan, record_spans=record_spans)
+        return out
