@@ -13,6 +13,7 @@ Public surface:
 
 from repro.core.oocgemm import is_in_core, ooc_gemm, ooc_syrk, plan_for_device
 from repro.core.ooc_attention import ooc_attention
+from repro.core.ooc_factor import ooc_cholesky, ooc_lu
 from repro.core.partitioner import (
     AttentionPartition,
     GemmPartition,
@@ -21,6 +22,7 @@ from repro.core.partitioner import (
 )
 from repro.core.pipeline import (
     ComputeStage,
+    FactorPipelineSpec,
     PipelineSpec,
     StreamedOperand,
     WriteBack,
@@ -29,7 +31,9 @@ from repro.core.pipeline import (
     build_gemm_schedule,
     build_syrk_schedule,
     build_vendor_schedule,
+    compile_factor_pipeline,
     compile_pipeline,
+    factor_pipeline_spec,
     gemm_pipeline_spec,
     schedule_stats,
     syrk_pipeline_spec,
@@ -78,18 +82,20 @@ from repro.core.streams import (
 
 __all__ = [
     "AttentionPartition", "BlockRef", "ComputeStage", "Device", "Event",
-    "ExecState", "GemmPartition", "HardwareModel", "HostOocRuntime",
-    "MeshOocRuntime", "Op", "OpKind", "OocRuntime", "PipelineSpec",
-    "RuntimeFactory", "Schedule", "ScheduleError", "ScheduleExecutor",
-    "SimResult", "SliceRef", "Stream", "StreamFactory", "StreamedOperand",
-    "VmemOocRuntime", "WriteBack", "attention_pipeline_spec",
-    "build_attention_schedule", "build_gemm_schedule", "build_syrk_schedule",
-    "build_vendor_schedule", "chrome_trace", "chrome_trace_groups",
-    "compile_pipeline", "gemm_pipeline_spec", "gpu_like", "is_in_core",
-    "ooc_attention", "ooc_gemm", "ooc_syrk", "phi_like",
-    "plan_attention_partition", "plan_for_device", "plan_gemm_partition",
-    "register_op_handler", "register_runtime", "schedule_stats", "simulate",
-    "simulate_reference", "syrk_pipeline_spec", "tpu_v5e_ici",
-    "tpu_v5e_vmem", "validate_schedule", "vendor_pipeline_spec",
-    "write_chrome_trace", "write_chrome_trace_groups",
+    "ExecState", "FactorPipelineSpec", "GemmPartition", "HardwareModel",
+    "HostOocRuntime", "MeshOocRuntime", "Op", "OpKind", "OocRuntime",
+    "PipelineSpec", "RuntimeFactory", "Schedule", "ScheduleError",
+    "ScheduleExecutor", "SimResult", "SliceRef", "Stream", "StreamFactory",
+    "StreamedOperand", "VmemOocRuntime", "WriteBack",
+    "attention_pipeline_spec", "build_attention_schedule",
+    "build_gemm_schedule", "build_syrk_schedule", "build_vendor_schedule",
+    "chrome_trace", "chrome_trace_groups", "compile_factor_pipeline",
+    "compile_pipeline", "factor_pipeline_spec", "gemm_pipeline_spec",
+    "gpu_like", "is_in_core", "ooc_attention", "ooc_cholesky", "ooc_gemm",
+    "ooc_lu", "ooc_syrk", "phi_like", "plan_attention_partition",
+    "plan_for_device", "plan_gemm_partition", "register_op_handler",
+    "register_runtime", "schedule_stats", "simulate", "simulate_reference",
+    "syrk_pipeline_spec", "tpu_v5e_ici", "tpu_v5e_vmem",
+    "validate_schedule", "vendor_pipeline_spec", "write_chrome_trace",
+    "write_chrome_trace_groups",
 ]

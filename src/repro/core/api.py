@@ -107,6 +107,29 @@ def hclHybridRuntime(devices, **kw):
     return HybridOocRuntime(devices, **kw)
 
 
+def hclOocFactor(A, kind: str = "cholesky", **kw):
+    """Facade over the out-of-core factorizations (DESIGN.md §8): one
+    lookahead pipeline schedule interleaving panel POTRF/GETRF/TRSM ops with
+    the streamed SYRK/GEMM trailing update.
+
+        L = hclOocFactor(A, "cholesky", budget_bytes=..., lookahead=1)
+        LU, perm = hclOocFactor(A, "lu", budget_bytes=..., tune="auto")
+
+    Keyword arguments forward to :func:`repro.core.ooc_factor.ooc_cholesky`
+    / :func:`~repro.core.ooc_factor.ooc_lu` (``panel``, ``budget_bytes``,
+    ``lookahead``, ``tune``, ``devices``, ...).  The engine computes in
+    float32 whatever the input dtype: float64 results carry f32-level
+    residuals (see the entry-point docstrings)."""
+    from repro.core.ooc_factor import ooc_cholesky, ooc_lu
+
+    if kind == "cholesky":
+        return ooc_cholesky(A, **kw)
+    if kind == "lu":
+        return ooc_lu(A, **kw)
+    raise ValueError(f"unknown factor kind {kind!r}; expected "
+                     f"'cholesky' or 'lu'")
+
+
 def hclAutoTuner(device: Optional[Device] = None, **kw):
     """Facade over :class:`repro.tune.AutoTuner` (DESIGN.md §6): calibrate
     the device once, then dispense cached ``TunedPlan``s — partition

@@ -1,56 +1,240 @@
-"""Out-of-core blocked Cholesky — the paper's stated future work (§VII:
-"we plan to provide out-of-core factorizations (LU, QR, Cholesky) that use
-the out-of-core matrix-matrix multiplication (DGEMM) as a fundamental
-building block").
+"""Out-of-core factorizations — the paper's §VII future work, first-class.
 
-Right-looking blocked Cholesky on an SPD matrix held in host memory:
+The paper closes by promising "out-of-core factorizations (LU, QR, Cholesky)
+that use the out-of-core matrix-matrix multiplication (DGEMM) as a
+fundamental building block".  Earlier revisions of this module were a host
+loop calling :func:`~repro.core.oocgemm.ooc_syrk` once per panel — no
+panel/update overlap, no LU.  Now the whole factorization is ONE compiled
+:class:`~repro.core.streams.Schedule`
+(:func:`~repro.core.pipeline.compile_factor_pipeline`) that interleaves
+in-core panel ops (POTRF / partial-pivot GETRF, TRSM solves — registered op
+handlers in ``core/runtime.py``) with the streamed SYRK/GEMM trailing
+update, with a *lookahead* parameter: panel ``k+1`` factors while trailing
+update ``k`` is still streaming, which is where blocked factorizations hide
+their critical path (DESIGN.md §8).
 
-  for each panel k:
-      A[k,k]  = chol(A[k,k])                     (in-core, panel-sized)
-      A[i,k]  = A[i,k] @ inv(L[k,k])^T           (panel solve, in-core)
-      A[i,j] -= A[i,k] @ A[j,k]^T                (trailing update — >90% of
-                                                  FLOPs — executed by the
-                                                  OOC GEMM engine)
+Entry points:
 
-Only O(panel x N) is resident during the panel steps; the trailing update is
-the first-class SYRK pipeline spec streamed through the same
-schedule/executor machinery as MMOOC.
+  * :func:`ooc_cholesky` — lower-triangular factor of a host-resident SPD
+    matrix.
+  * :func:`ooc_lu` — right-looking LU with partial pivoting inside the
+    resident panel and row-swap replay on write-back; returns ``(LU, perm)``
+    with ``A[perm] = tril(LU, -1) + I  @  triu(LU)``.
+
+Both accept ``tune="auto"`` (the autotuner plans panel width, trailing block
+dims, stream/buffer counts and lookahead depth under one shrinking-dims
+cache key) and ``devices=[...]`` (the trailing updates co-execute across a
+heterogeneous device set via the hybrid subsystem; panel ops stay host-side,
+as they are panel-sized).
 """
 
 from __future__ import annotations
 
+from typing import Optional, Sequence, Tuple
+
 import numpy as np
 
-from repro.core.oocgemm import ooc_syrk
+from repro.core import pipeline as plib
+from repro.core.oocgemm import ooc_gemm, ooc_syrk
+from repro.core.pipeline import FactorPipelineSpec, factor_pipeline_spec
+from repro.core.runtime import (ScheduleExecutor, apply_panel_pivots,
+                                getrf_panel)
+from repro.core.streams import validate_schedule
+
+
+def _plan_factor_spec(kind: str, n: int, panel: int, budget_bytes: int,
+                      bytes_per_el: int, lookahead: int,
+                      nbuf: int) -> FactorPipelineSpec:
+    """Feasible spec for the budget, degrading gracefully: try the requested
+    (lookahead, panel) first, then drop the lookahead buffers, then halve
+    the panel — the panel width is a performance hint, not a contract."""
+    err: Optional[ValueError] = None
+    pw = min(panel, n)
+    while pw >= 1:
+        for la in sorted({lookahead, 0}, reverse=True):
+            try:
+                return factor_pipeline_spec(
+                    n, pw, budget_bytes, bytes_per_el,
+                    kind=kind, lookahead=la, nbuf=nbuf)
+            except ValueError as e:
+                err = e
+        pw //= 2
+    raise err if err is not None else ValueError(
+        f"no feasible {kind} pipeline for n={n} within {budget_bytes}B")
+
+
+def _tuned_factor_spec(tuner, kind: str, n: int, panel: int,
+                       budget_bytes: int, bytes_per_el: int,
+                       dtype) -> Tuple[FactorPipelineSpec, int, int]:
+    """(spec, nstreams, nbuf) from the autotuner's factor plan — one cached
+    search covers every shrinking per-panel trailing shape."""
+    if tuner is None:
+        from repro.tune import get_default_tuner
+        tuner = get_default_tuner()
+    plan = tuner.factor_plan(kind, n, panel, budget_bytes,
+                             dtype=np.dtype(dtype).name)
+    spec = factor_pipeline_spec(
+        n, plan.param("panel"), budget_bytes, bytes_per_el, kind=kind,
+        lookahead=plan.param("lookahead"), nbuf=plan.nbuf,
+        bm=plan.param("bm"), bn=plan.param("bn"))
+    return spec, plan.nstreams, plan.nbuf
+
+
+def _run_factor(A: np.ndarray, spec: FactorPipelineSpec, nstreams: int,
+                nbuf: int, validate: bool):
+    """Compile + execute the factor schedule over a copy of ``A``; returns
+    (factored matrix, executor state) — LU's permutation rides in scratch."""
+    sched = plib.compile_factor_pipeline(spec, nstreams=nstreams, nbuf=nbuf)
+    if validate:
+        validate_schedule(sched)
+    out = np.array(A, copy=True)
+    state = ScheduleExecutor().run(
+        sched, operands={}, outputs={"A": out},
+        ctx={"alpha": -1.0, "beta": 1.0, "panel": spec.panel, "n": spec.n})
+    return out, state
+
+
+def _check_square(A) -> int:
+    n = A.shape[0]
+    if A.ndim != 2 or A.shape != (n, n):
+        raise ValueError(f"square matrix required, got {A.shape}")
+    return n
 
 
 def ooc_cholesky(A, panel: int = 256, *, budget_bytes: int,
-                 backend: str = "host", tune=None,
-                 tuner=None) -> np.ndarray:
+                 backend: str = "host", tune=None, tuner=None,
+                 lookahead: int = 1, nstreams: int = 2, nbuf: int = 2,
+                 validate: bool = False,
+                 devices: Optional[Sequence] = None,
+                 tolerance: Optional[float] = None) -> np.ndarray:
     """Lower-triangular Cholesky factor of SPD ``A`` (host-resident).
 
-    ``tune="auto"`` forwards to :func:`~repro.core.oocgemm.ooc_syrk`: each
-    trailing-update shape gets its own cached plan (the shapes shrink as
-    the factorization advances, so a handful of plans cover the run)."""
+    Host backend (default): the factorization is one lookahead pipeline
+    schedule — panel POTRF/TRSM ops interleaved with the streamed SYRK
+    trailing update; ``lookahead=0`` degenerates to the sequential
+    per-panel loop.  ``tune="auto"`` resolves panel width, trailing block
+    dims, stream count, buffer depth and lookahead from the autotuner.
+
+    ``devices=[...]`` (or a non-host ``backend``) falls back to the
+    per-panel loop with the trailing update executed by
+    :func:`~repro.core.oocgemm.ooc_syrk` on that backend / hybrid device
+    set — panels are panel-sized and stay on the host.
+
+    Precision: the streaming engine computes in float32 (JAX x64 is off in
+    this stack), so a float64 input returns a float64 array with
+    f32-accurate residuals (~1e-6 relative, not LAPACK's ~1e-15) — pair
+    with iterative refinement if full f64 accuracy matters.
+    """
+    if tune not in (None, "auto"):
+        raise ValueError(f"unknown tune mode {tune!r}; expected None/'auto'")
+    A = np.asarray(A)
+    n = _check_square(A)
+    if devices is not None or backend != "host":
+        return _loop_cholesky(A, panel, budget_bytes, backend, tune, tuner,
+                              devices, tolerance)
+    bpe = np.dtype(A.dtype).itemsize
+    if tune == "auto":
+        spec, nstreams, nbuf = _tuned_factor_spec(
+            tuner, "cholesky", n, panel, budget_bytes, bpe, A.dtype)
+    else:
+        spec = _plan_factor_spec("cholesky", n, panel, budget_bytes, bpe,
+                                 lookahead, nbuf)
+    out, _ = _run_factor(A, spec, nstreams, nbuf, validate)
+    return np.tril(out)
+
+
+def ooc_lu(A, panel: int = 256, *, budget_bytes: int,
+           backend: str = "host", tune=None, tuner=None,
+           lookahead: int = 1, nstreams: int = 2, nbuf: int = 2,
+           validate: bool = False,
+           devices: Optional[Sequence] = None,
+           tolerance: Optional[float] = None
+           ) -> Tuple[np.ndarray, np.ndarray]:
+    """Right-looking LU with partial pivoting: ``A[perm] = L @ U``.
+
+    Returns ``(LU, perm)``: ``LU`` packs the unit-lower ``L`` below the
+    diagonal and ``U`` on/above it; ``perm`` is the row permutation such
+    that ``A[perm]`` equals ``(tril(LU, -1) + I) @ triu(LU)``.
+
+    Pivot search runs over the full resident panel (true partial pivoting:
+    the panel holds every remaining row of its columns); row swaps replay on
+    the host columns outside the panel at panel write-back
+    (``lu_writeback`` handler), so the trailing stream always reads
+    consistently permuted rows.  ``lookahead`` overlaps the next panel's
+    transfer+GETRF with the current trailing update; ``tune="auto"`` and
+    ``devices=[...]`` behave as in :func:`ooc_cholesky` (the hybrid path
+    co-executes the GEMM trailing update across the device set).  As there,
+    the engine computes in float32 regardless of input dtype — float64
+    results carry f32-level residuals.
+    """
+    if tune not in (None, "auto"):
+        raise ValueError(f"unknown tune mode {tune!r}; expected None/'auto'")
+    A = np.asarray(A)
+    n = _check_square(A)
+    if devices is not None or backend != "host":
+        return _loop_lu(A, panel, budget_bytes, backend, tune, tuner,
+                        devices, tolerance)
+    bpe = np.dtype(A.dtype).itemsize
+    if tune == "auto":
+        spec, nstreams, nbuf = _tuned_factor_spec(
+            tuner, "lu", n, panel, budget_bytes, bpe, A.dtype)
+    else:
+        spec = _plan_factor_spec("lu", n, panel, budget_bytes, bpe,
+                                 lookahead, nbuf)
+    out, state = _run_factor(A, spec, nstreams, nbuf, validate)
+    return out, state.scratch.get("perm", np.arange(n))
+
+
+# ---------------------------------------------------------------------------
+# Per-panel loop: the non-host backends and the hybrid device path (panel
+# math host-side, trailing update through the OOC kernels)
+# ---------------------------------------------------------------------------
+def _trailing_kwargs(budget_bytes, backend, tune, tuner, devices, tolerance):
+    kw = dict(budget_bytes=budget_bytes, backend=backend, tune=tune,
+              tuner=tuner)
+    if devices is not None:
+        kw.update(devices=devices, tolerance=tolerance)
+    return kw
+
+
+def _loop_cholesky(A, panel, budget_bytes, backend, tune, tuner, devices,
+                   tolerance) -> np.ndarray:
     A = np.array(A, copy=True)
     n = A.shape[0]
-    assert A.shape == (n, n), "square SPD input required"
-
+    kw = _trailing_kwargs(budget_bytes, backend, tune, tuner, devices,
+                          tolerance)
     for k0 in range(0, n, panel):
         k1 = min(n, k0 + panel)
-        # 1. factor the diagonal block in-core
         A[k0:k1, k0:k1] = np.linalg.cholesky(A[k0:k1, k0:k1])
-        Lkk = A[k0:k1, k0:k1]
         if k1 == n:
             break
-        # 2. panel solve: A[i,k] <- A[i,k] @ inv(Lkk)^T
-        #    (solve Lkk @ X^T = A[i,k]^T; the panel is the resident set)
-        A[k1:, k0:k1] = np.linalg.solve(Lkk, A[k1:, k0:k1].T).T
-        # 3. trailing symmetric update A[k1:, k1:] -= P @ P^T, streamed by
-        #    the OOC SYRK spec (no host-side P.T materialization)
+        A[k1:, k0:k1] = np.linalg.solve(A[k0:k1, k0:k1],
+                                        A[k1:, k0:k1].T).T
         P = np.ascontiguousarray(A[k1:, k0:k1])
         A[k1:, k1:] = np.asarray(ooc_syrk(
-            P, A[k1:, k1:], alpha=-1.0, beta=1.0,
-            budget_bytes=budget_bytes, backend=backend,
-            tune=tune, tuner=tuner))
+            P, A[k1:, k1:], alpha=-1.0, beta=1.0, **kw))
     return np.tril(A)
+
+
+def _loop_lu(A, panel, budget_bytes, backend, tune, tuner, devices,
+             tolerance) -> Tuple[np.ndarray, np.ndarray]:
+    A = np.array(A, copy=True)
+    n = A.shape[0]
+    perm = np.arange(n)
+    kw = _trailing_kwargs(budget_bytes, backend, tune, tuner, devices,
+                          tolerance)
+    for k0 in range(0, n, panel):
+        k1 = min(n, k0 + panel)
+        pnl = np.ascontiguousarray(A[k0:, k0:k1])
+        piv = getrf_panel(pnl)
+        apply_panel_pivots(A, piv, k0, k1, perm)
+        A[k0:, k0:k1] = pnl
+        if k1 == n:
+            break
+        lkk = np.tril(A[k0:k1, k0:k1], -1) + np.eye(k1 - k0, dtype=A.dtype)
+        A[k0:k1, k1:] = np.linalg.solve(lkk, A[k0:k1, k1:])
+        L = np.ascontiguousarray(A[k1:, k0:k1])
+        U = np.ascontiguousarray(A[k0:k1, k1:])
+        A[k1:, k1:] = np.asarray(ooc_gemm(
+            L, U, A[k1:, k1:], alpha=-1.0, beta=1.0, **kw))
+    return A, perm

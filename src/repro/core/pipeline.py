@@ -31,7 +31,8 @@ ops.  One schedule object drives simulation, host execution, and stats.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+import math
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 from repro.core.partitioner import AttentionPartition, GemmPartition
 from repro.core.streams import (
@@ -526,8 +527,437 @@ def vendor_pipeline_spec(part: GemmPartition, tile: int = 512) -> PipelineSpec:
 
 
 # ===========================================================================
-# Builders (spec wrappers — the pre-DSL public surface)
+# Factorization pipeline — the paper's §VII future work as one multi-kernel
+# lookahead program (DESIGN.md §8)
 # ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class FactorPipelineSpec:
+    """Blocked right-looking factorization (Cholesky or partial-pivot LU) as
+    ONE multi-kernel pipeline.
+
+    Unlike :class:`PipelineSpec` (a single homogeneous compute stage), a
+    factorization interleaves *panel* ops — in-core POTRF/GETRF on a resident
+    panel column, TRSM panel solves — with the streamed SYRK/GEMM trailing
+    update of the shrinking sub-matrix.  ``compile_factor_pipeline`` turns
+    this spec into one event-correct :class:`~repro.core.streams.Schedule`
+    that the ordinary executor/simulator machinery consumes, so the whole
+    factorization simulates, traces and executes like any other kernel.
+
+    Attributes:
+      kind: "cholesky" or "lu".
+      n: matrix order (square, host-resident).
+      panel: panel width (last panel may be narrower).
+      bm, bn: trailing-update C block dims (shared across panels; per-panel
+        grids are ``ceil(m_k/bm) x ceil(m_k/bn)`` over the shrinking
+        trailing dim ``m_k``).
+      lookahead: 0 factors panel ``k+1`` only after trailing update ``k``
+        fully drained (the sequential per-panel loop); >= 1 issues panel
+        ``k+1``'s transfer+factor as soon as the trailing blocks covering
+        its columns are written back, overlapping the panel critical path
+        with the remaining trailing stream.  Depths beyond 1 only add panel
+        parity buffers (the data dependencies serialize deeper lookahead).
+    """
+
+    kind: str
+    n: int
+    panel: int
+    bm: int
+    bn: int
+    bytes_per_el: int
+    budget: int
+    lookahead: int = 1
+
+    @property
+    def npanels(self) -> int:
+        return max(1, math.ceil(self.n / self.panel))
+
+    @property
+    def npbuf(self) -> int:
+        """Panel parity buffers: lookahead panels in flight plus the one
+        being consumed."""
+        return min(max(self.lookahead, 0), self.npanels - 1) + 1
+
+    def panel_range(self, k: int) -> Tuple[int, int]:
+        """(k0, k1) column/row extent of panel ``k``."""
+        k0 = k * self.panel
+        return k0, min(self.n, k0 + self.panel)
+
+    def panel_bytes(self) -> int:
+        """Resident bytes of the ``npbuf`` largest panel columns (plus, for
+        LU, their U row panels) — the reserve charged against the budget
+        before the trailing blocks are planned."""
+        pw = min(self.panel, self.n)
+        pnl = sum((self.n - i * pw) * pw
+                  for i in range(self.npbuf) if i * pw < self.n)
+        if self.kind == "lu":
+            pnl += sum(pw * max(self.n - (i + 1) * pw, 0)
+                       for i in range(self.npbuf))
+        return pnl * self.bytes_per_el
+
+    def working_set_bytes(self, nbuf: int = 2) -> int:
+        """Worst-case resident bytes: :meth:`panel_bytes` plus the stage-0
+        trailing SYRK/GEMM working set under the generalized ``nbuf``-aware
+        model."""
+        pw = min(self.panel, self.n)
+        m0 = self.n - pw
+        trail = 0
+        if m0 > 0:
+            part = GemmPartition(m0, m0, pw,
+                                 math.ceil(m0 / self.bm),
+                                 math.ceil(m0 / self.bn),
+                                 self.bm, self.bn, self.bytes_per_el,
+                                 self.budget)
+            trail = part.working_set_bytes(nbuf, None)
+        return self.panel_bytes() + trail
+
+
+def factor_pipeline_spec(
+    n: int,
+    panel: int,
+    budget_bytes: int,
+    bytes_per_el: int = 4,
+    *,
+    kind: str = "cholesky",
+    lookahead: int = 1,
+    nbuf: int = 2,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+) -> FactorPipelineSpec:
+    """Plan a factorization pipeline that fits ``budget_bytes``.
+
+    The panel buffers (and LU's U-row buffers) are charged against the
+    budget first; the remainder sizes the trailing-update blocks through the
+    ordinary partition planner on the *largest* trailing shape
+    ``(n-panel) x (n-panel) x panel`` — later panels reuse the same block
+    dims over shrinking grids.  Raises ValueError when even the minimum
+    aligned configuration cannot fit (callers may degrade ``lookahead`` or
+    ``panel`` and retry — :func:`repro.core.ooc_factor.ooc_cholesky` does).
+    """
+    if kind not in ("cholesky", "lu"):
+        raise ValueError(f"unknown factor kind {kind!r}")
+    if n <= 0 or panel <= 0:
+        raise ValueError(f"bad factor shape n={n}, panel={panel}")
+    pw = min(panel, n)
+    probe = FactorPipelineSpec(kind, n, pw, bm or 1, bn or 1,
+                               bytes_per_el, budget_bytes, lookahead)
+    pnl_bytes = probe.working_set_bytes(nbuf) if n <= pw else None
+    if n <= pw:  # single panel: no trailing update to plan
+        if pnl_bytes > budget_bytes:
+            raise ValueError(
+                f"{kind} panel {n}x{pw} needs {pnl_bytes}B resident, "
+                f"budget is {budget_bytes}B")
+        return dataclasses.replace(probe, bm=pw, bn=pw)
+    if bm is None or bn is None:
+        reserve = probe.panel_bytes()
+        remaining = budget_bytes - reserve
+        if remaining <= 0:
+            raise ValueError(
+                f"{kind} lookahead={lookahead} panel buffers alone need "
+                f"{reserve}B, budget is {budget_bytes}B")
+        from repro.core.partitioner import plan_gemm_partition
+        part = plan_gemm_partition(n - pw, n - pw, pw, remaining,
+                                   bytes_per_el, nbuf=nbuf)
+        bm, bn = part.bm, part.bn
+    spec = FactorPipelineSpec(kind, n, pw, bm, bn, bytes_per_el,
+                              budget_bytes, lookahead)
+    need = spec.working_set_bytes(nbuf)
+    if need > budget_bytes:
+        raise ValueError(
+            f"{kind} pipeline (panel={pw}, lookahead={lookahead}, "
+            f"bm={bm}, bn={bn}) needs {need}B resident, budget is "
+            f"{budget_bytes}B")
+    return spec
+
+
+def _stage_grid(o: int, m: int, bm: int, bn: int):
+    """Trailing-stage block descriptors: (i, j, rows, cols) in global
+    coordinates over the ``m x m`` trailing square at origin ``o``, in the
+    paper's column-major order."""
+    h = math.ceil(m / bm)
+    w = math.ceil(m / bn)
+    out = []
+    for j in range(w):
+        cs = o + j * bn
+        cn = min(bn, o + m - cs)
+        for i in range(h):
+            rs = o + i * bm
+            rn = min(bm, o + m - rs)
+            out.append((i, j, (rs, rn), (cs, cn)))
+    return out
+
+
+def _hits(span: Tuple[int, int], lo: int, hi: int) -> bool:
+    return span[0] < hi and lo < span[0] + span[1]
+
+
+def compile_factor_pipeline(
+    spec: FactorPipelineSpec,
+    nstreams: int = 2,
+    nbuf: int = 2,
+    device: Optional[Device] = None,
+) -> Schedule:
+    """Compile a factorization spec into one event-correct Schedule.
+
+    Program shape per panel ``k`` (all operands slice the single host
+    matrix ``A``; trailing updates run the ordinary ``dgemm`` handler with
+    ``ctx = {alpha: -1, beta: 1}``):
+
+      Cholesky: ``S(pnl) POTRF TRSM R(pnl)`` then stream the SYRK trailing
+      blocks; LU: ``S(pnl) GETRF`` then a ``lu_writeback`` finalize D2H that
+      replays the panel's row swaps on the host columns outside the panel,
+      then ``S(ur) TRSM R(ur)`` for the U row panel, then the GEMM trailing
+      blocks.
+
+    Lookahead wiring: the trailing blocks covering the *next* panel (its
+    columns, plus its U row for LU) are emitted and event-ordered first;
+    panel ``k+1``'s transfer+factor waits only on those, so it overlaps the
+    rest of trailing update ``k`` — in the simulator via the event graph and
+    in the executor via issue order (panel front issued before the rest).
+    LU's swap replay additionally waits on every stage-``k`` write-back (the
+    replay touches the whole trailing region), so its lookahead overlap is
+    the panel transfer + GETRF only; Cholesky's whole panel chain overlaps.
+    With ``lookahead=0`` the next panel instead waits on every trailing
+    write-back: the sequential per-panel loop, as one schedule.
+    """
+    n, bpe, lu = spec.n, spec.bytes_per_el, spec.kind == "lu"
+    npanels, npbuf = spec.npanels, spec.npbuf
+    lookahead = max(0, spec.lookahead)
+    dev = device or Device("HBM", 0, spec.budget)
+    # trailing blocks round-robin the first `nstreams` streams; the panel
+    # chain gets a dedicated stream so a factored-early panel never blocks
+    # trailing transfers queued behind it in stream order (the classic
+    # lookahead layout: panel stream + update streams)
+    b = BlockPipelineBuilder(dev, nstreams + 1, nbuf)
+    panel_stream = nstreams
+
+    # buffer-parity release ledger: events that must precede reuse of a key
+    release: Dict[Tuple[str, int], Tuple[Event, ...]] = {}
+    # previous trailing stage's host writes: (rows, cols, wC event)
+    stage_writes: List[Tuple[Tuple[int, int], Tuple[int, int], Event]] = []
+    gstep = 0  # global trailing step counter (stream round robin)
+
+    def waits_for(key, *events: Iterable[Event]) -> Tuple[Event, ...]:
+        out: Dict[str, Event] = {}
+        for ev in release.pop(key, ()):
+            out[ev.name] = ev
+        for group in events:
+            for ev in group:
+                out[ev.name] = ev
+        return tuple(out.values())
+
+    def overlapping(rows, cols) -> List[Event]:
+        return [ev for wr, wc, ev in stage_writes + new_writes
+                if _hits(wr, rows[0], rows[0] + rows[1])
+                and _hits(wc, cols[0], cols[0] + cols[1])]
+
+    def emit_block(k: int, pw: int, blk) -> None:
+        """One trailing-update block of stage ``k``: stream the multiplier
+        slices and the C block, dgemm, write back."""
+        nonlocal gstep
+        i, j, rows, cols = blk
+        k0, k1 = spec.panel_range(k)
+        s = gstep % nstreams
+        h_k = math.ceil((n - k1) / spec.bm)
+        idx = j * h_k + i
+        # left multiplier: rows of the factored panel (the A/Pr role)
+        lkey = ("Fr", idx % nbuf)
+        b.issue(
+            kind=OpKind.H2D, tag=f"S(fr{k}[{idx}])", stream=s,
+            waits=waits_for(lkey, overlapping(rows, (k0, pw)),
+                            (b.event(f"wPNL[{k}]"),)),
+            records=b.event(f"rFr{k}[{idx}]"),
+            buffers_written=(lkey,), bytes=rows[1] * pw * bpe,
+            payload=SliceRef("A", idx, rows=rows, cols=(k0, pw)))
+        # right multiplier, once per column: transposed panel rows (SYRK) or
+        # the U row panel slice (LU).  Keyed per (stage, column) — with the
+        # Cholesky triangular skip a column's first *emitted* block need not
+        # be block row 0.
+        tkey = ("Ft", j % 2)
+        fresh_ft = (k, j) not in ft_loaded
+        if fresh_ft:
+            ft_loaded.add((k, j))
+            if lu:
+                ft = SliceRef("A", j, rows=(k0, pw), cols=cols)
+                ft_ev = overlapping((k0, pw), cols) + [b.event(f"wUR[{k}]")]
+            else:
+                ft = SliceRef("A", j, rows=cols, cols=(k0, pw),
+                              transpose=True)
+                ft_ev = overlapping(cols, (k0, pw)) + [b.event(f"wPNL[{k}]")]
+            b.issue(
+                kind=OpKind.H2D, tag=f"S(ft{k}[{j}])", stream=s,
+                waits=waits_for(tkey, ft_ev),
+                records=b.event(f"rFt{k}[{j}]"),
+                buffers_written=(tkey,), bytes=pw * cols[1] * bpe,
+                payload=ft)
+        ckey = ("C", idx % nbuf)
+        # LU: the swap replay permuted these rows on host, so the C block
+        # must not be read before the panel write-back (Cholesky's panel
+        # write region is disjoint from the trailing square).
+        c_extra = (b.event(f"wPNL[{k}]"),) if lu else ()
+        b.issue(
+            kind=OpKind.H2D, tag=f"S(c{k}[{idx}])", stream=s,
+            waits=waits_for(ckey, overlapping(rows, cols), c_extra),
+            records=b.event(f"rC{k}[{idx}]"),
+            buffers_written=(ckey,), bytes=rows[1] * cols[1] * bpe,
+            payload=SliceRef("A", idx, rows=rows, cols=cols))
+        b.issue(
+            kind=OpKind.COMPUTE, tag=f"{'GEMM' if lu else 'SYRK'}{k}[{idx}]",
+            stream=s,
+            waits=(b.event(f"rFr{k}[{idx}]"), b.event(f"rFt{k}[{j}]"),
+                   b.event(f"rC{k}[{idx}]")),
+            records=b.event(f"eT{k}[{idx}]"),
+            buffers_read=(lkey, tkey), buffers_written=(ckey,),
+            flops=2 * rows[1] * cols[1] * pw + 2 * rows[1] * cols[1],
+            payload=BlockRef(kernel="dgemm", index=idx))
+        wc = b.event(f"wC{k}[{idx}]")
+        b.issue(
+            kind=OpKind.D2H, tag=f"R(c{k}[{idx}])", stream=s,
+            waits=(b.event(f"eT{k}[{idx}]"),), records=wc,
+            buffers_read=(ckey,), bytes=rows[1] * cols[1] * bpe,
+            payload=SliceRef("A", idx, rows=rows, cols=cols))
+        # ledger updates: buffer reuse + host-region write
+        release[lkey] = (b.event(f"eT{k}[{idx}]"),)
+        keep = () if fresh_ft else release.get(tkey, ())
+        release[tkey] = tuple(keep) + (b.event(f"eT{k}[{idx}]"),)
+        release[ckey] = (wc,)
+        new_writes.append((rows, cols, wc))
+        gstep += 1
+
+    rest: List = []          # deferred trailing blocks of the previous stage
+    rest_stage = -1
+    ft_loaded: set = set()   # (stage, column) pairs whose Ft slice landed
+    new_writes: List[Tuple[Tuple[int, int], Tuple[int, int], Event]] = []
+
+    for k in range(npanels):
+        k0, k1 = spec.panel_range(k)
+        pw = k1 - k0
+        m = n - k0
+        key = ("PNL", k % npbuf)
+        s = panel_stream
+        # ---- panel front: transfer + in-core factor --------------------
+        if lookahead == 0:
+            # sequential per-panel loop: the panel waits for every trailing
+            # write-back of the previous stage (all still in new_writes —
+            # stage k-1 emits in full before this panel)
+            dep = [ev for _, _, ev in stage_writes + new_writes]
+        else:
+            dep = overlapping((k0, m), (k0, pw))
+        b.issue(
+            kind=OpKind.H2D, tag=f"S(pnl[{k}])", stream=s,
+            waits=waits_for(key, dep),
+            records=b.event(f"rPNL[{k}]"),
+            buffers_written=(key,), bytes=m * pw * bpe,
+            payload=SliceRef("A", k, rows=(k0, m), cols=(k0, pw)))
+        b.issue(
+            kind=OpKind.COMPUTE, tag=f"{'GETRF' if lu else 'POTRF'}[{k}]",
+            stream=s,
+            waits=(b.event(f"rPNL[{k}]"),), records=b.event(f"ePF[{k}]"),
+            buffers_read=(key,), buffers_written=(key,),
+            flops=(pw * pw * (3 * m - pw) // 3 if lu
+                   else pw * pw * pw // 3),
+            payload=BlockRef(kernel="panel_lu" if lu else "panel_chol",
+                             index=k))
+        last = b.event(f"ePF[{k}]")
+        if not lu and m > pw:
+            b.issue(
+                kind=OpKind.COMPUTE, tag=f"TRSM[{k}]", stream=s,
+                waits=(last,), records=b.event(f"eTS[{k}]"),
+                buffers_read=(key,), buffers_written=(key,),
+                flops=(m - pw) * pw * pw,
+                payload=BlockRef(kernel="panel_trsm", index=k))
+            last = b.event(f"eTS[{k}]")
+        if not lu:
+            # Cholesky's panel chain is independent of the previous stage's
+            # remaining blocks: write it back before draining them so the
+            # next trailing stage can start the moment its inputs land.
+            b.issue(
+                kind=OpKind.D2H, tag=f"R(pnl[{k}])", stream=s,
+                waits=(last,), records=b.event(f"wPNL[{k}]"),
+                buffers_read=(key,), bytes=m * pw * bpe,
+                payload=SliceRef("A", k, rows=(k0, m), cols=(k0, pw)))
+            release[key] = (b.event(f"wPNL[{k}]"),)
+        # ---- drain the previous stage's deferred trailing blocks -------
+        if rest:
+            rpw = spec.panel_range(rest_stage)[1] - \
+                spec.panel_range(rest_stage)[0]
+            for blk in rest:
+                emit_block(rest_stage, rpw, blk)
+            rest = []
+        if lu:
+            # ---- panel back: swap replay + U row panel solve -----------
+            # the replay permutes rows across the whole trailing region, so
+            # it orders after every write-back of the previous stage
+            wb_waits = {b.event(f"ePF[{k}]").name: b.event(f"ePF[{k}]")}
+            for _, _, ev in stage_writes + new_writes:
+                wb_waits[ev.name] = ev
+            b.issue(
+                kind=OpKind.D2H, tag=f"R(pnl[{k}])", stream=s,
+                waits=tuple(wb_waits.values()),
+                records=b.event(f"wPNL[{k}]"),
+                buffers_read=(key,), bytes=m * pw * bpe,
+                payload=BlockRef(kernel="lu_writeback", index=k))
+            release[key] = (b.event(f"wPNL[{k}]"),)
+            if m > pw:
+                ukey = ("UR", k % npbuf)
+                b.issue(
+                    kind=OpKind.H2D, tag=f"S(ur[{k}])", stream=s,
+                    waits=waits_for(ukey, (b.event(f"wPNL[{k}]"),)),
+                    records=b.event(f"rUR[{k}]"),
+                    buffers_written=(ukey,), bytes=pw * (n - k1) * bpe,
+                    payload=SliceRef("A", k, rows=(k0, pw),
+                                     cols=(k1, n - k1)))
+                b.issue(
+                    kind=OpKind.COMPUTE, tag=f"TRSM[{k}]", stream=s,
+                    waits=(b.event(f"rUR[{k}]"), b.event(f"ePF[{k}]")),
+                    records=b.event(f"eTS[{k}]"),
+                    buffers_read=(key, ukey), buffers_written=(ukey,),
+                    flops=(n - k1) * pw * pw,
+                    payload=BlockRef(kernel="lu_trsm", index=k))
+                b.issue(
+                    kind=OpKind.D2H, tag=f"R(ur[{k}])", stream=s,
+                    waits=(b.event(f"eTS[{k}]"),),
+                    records=b.event(f"wUR[{k}]"),
+                    buffers_read=(ukey,), bytes=pw * (n - k1) * bpe,
+                    payload=SliceRef("A", k, rows=(k0, pw),
+                                     cols=(k1, n - k1)))
+                release[ukey] = (b.event(f"wUR[{k}]"),)
+                release[key] = (b.event(f"wPNL[{k}]"),
+                                b.event(f"eTS[{k}]"))
+        # stage k-1 is fully emitted: its writes (plus this panel's) become
+        # the overlap ledger for stage k's reads
+        stage_writes = new_writes
+        new_writes = []
+        # ---- trailing update of stage k --------------------------------
+        if k1 >= n:
+            continue
+        blocks = _stage_grid(k1, n - k1, spec.bm, spec.bn)
+        if not lu:
+            # Cholesky is symmetric: nothing ever reads the strict upper
+            # triangle (panels and multiplier slices are at-or-below the
+            # diagonal, np.linalg.cholesky reads only the lower half, and
+            # ooc_cholesky tril's the result), so blocks entirely above it
+            # are dead work — skipping them halves the trailing flops and
+            # traffic.  Diagonal-crossing blocks stay whole.
+            blocks = [blk for blk in blocks
+                      if blk[2][0] + blk[2][1] > blk[3][0]]
+        if lookahead == 0 or k == npanels - 1:
+            prio, rest = blocks, []
+        else:
+            nk0, nk1 = spec.panel_range(k + 1)
+            # the leading block column(s): what the next panel factor reads.
+            # Whole columns only, so each column's once-per-column Ft
+            # transfer stays adjacent to all its consumers.  (LU's U row
+            # panel additionally needs the first block *row*, but its chain
+            # is fenced behind the swap replay — which waits on the whole
+            # stage — so prioritizing it would buy nothing.)
+            prio = [blk for blk in blocks if _hits(blk[3], nk0, nk1)]
+            rest = [blk for blk in blocks if not _hits(blk[3], nk0, nk1)]
+        rest_stage = k
+        for blk in prio:
+            emit_block(k, pw, blk)
+    # the last stage's deferred blocks (none: the final panel drains them)
+    assert not rest, "internal: trailing blocks left unemitted"
+    return b.sched
 def build_gemm_schedule(
     part: GemmPartition,
     nstreams: int = 2,

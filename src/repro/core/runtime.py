@@ -253,6 +253,8 @@ class ScheduleExecutor:
                 self._handler(ref)(st, op, ref)
             elif op.kind == OpKind.D2H:
                 if isinstance(ref, BlockRef):  # finalize handler
+                    for key in list(pending):  # finalizers read/patch host
+                        flush(key)             # state: land in-flight blocks
                     self._handler(ref)(st, op, ref)
                 else:
                     key = op.buffers_read[0]
@@ -290,6 +292,111 @@ def _dgemm_handler(st: ExecState, op: Op, ref: BlockRef) -> None:
         jnp.asarray(st.ctx.get("alpha", 1.0), dtype=jnp.float32),
         jnp.asarray(st.ctx.get("beta", 0.0), dtype=jnp.float32),
     )
+
+
+# ---------------------------------------------------------------------------
+# Factorization panel ops (the paper's §VII kernels, DESIGN.md §8): in-core
+# panel factor / solve handlers the factor pipeline interleaves with the
+# streamed dgemm trailing update.  Panels are resident parity buffers shaped
+# (m, pw); the panel width is recovered from the buffer itself.
+# ---------------------------------------------------------------------------
+def getrf_panel(buf: np.ndarray) -> np.ndarray:
+    """Unblocked right-looking LU with partial pivoting on an (m, pw) panel,
+    in place.  Returns LAPACK-style local pivot rows ``piv`` (column ``j``
+    swapped panel rows ``j`` and ``piv[j]``); L's unit diagonal is implicit,
+    multipliers live below it, U on and above."""
+    m, pw = buf.shape
+    piv = np.arange(pw)
+    for j in range(pw):
+        p = j + int(np.argmax(np.abs(buf[j:, j])))
+        piv[j] = p
+        if p != j:
+            buf[[j, p], :] = buf[[p, j], :]
+        d = buf[j, j]
+        if d != 0:
+            buf[j + 1:, j] /= d
+            if j + 1 < pw:
+                buf[j + 1:, j + 1:] -= np.outer(buf[j + 1:, j],
+                                                buf[j, j + 1:])
+    return piv
+
+
+def apply_panel_pivots(A: np.ndarray, piv: np.ndarray, k0: int, k1: int,
+                       perm: np.ndarray) -> None:
+    """Replay a panel's local pivots on the host matrix columns *outside*
+    the panel (left of it: already-written L; right of it: the trailing
+    columns), accumulating the global row permutation — the one definition
+    of the swap-replay invariant, shared by the pipeline's ``lu_writeback``
+    handler and the per-panel fallback loop."""
+    for j, p in enumerate(piv):
+        if p != j:
+            r1, r2 = k0 + j, k0 + int(p)
+            A[[r1, r2], :k0] = A[[r2, r1], :k0]
+            A[[r1, r2], k1:] = A[[r2, r1], k1:]
+            perm[[r1, r2]] = perm[[r2, r1]]
+
+
+@register_op_handler("panel_chol")
+def _panel_chol_handler(st: ExecState, op: Op, ref: BlockRef) -> None:
+    """POTRF: factor the resident panel's diagonal block in-core (the upper
+    triangle comes back zeroed, as np.linalg.cholesky leaves it)."""
+    key = op.buffers_written[0]
+    buf = np.array(st.bufs[key])
+    d = buf.shape[1]
+    buf[:d, :d] = np.linalg.cholesky(buf[:d, :d])
+    st.bufs[key] = jnp.asarray(buf)
+
+
+@register_op_handler("panel_trsm")
+def _panel_trsm_handler(st: ExecState, op: Op, ref: BlockRef) -> None:
+    """Cholesky panel solve: sub-diagonal rows <- rows @ inv(Lkk)^T, in the
+    resident panel buffer."""
+    key = op.buffers_written[0]
+    buf = np.array(st.bufs[key])
+    d = buf.shape[1]
+    buf[d:, :] = np.linalg.solve(buf[:d, :d], buf[d:, :].T).T
+    st.bufs[key] = jnp.asarray(buf)
+
+
+@register_op_handler("panel_lu")
+def _panel_lu_handler(st: ExecState, op: Op, ref: BlockRef) -> None:
+    """GETRF: partial-pivot LU of the resident panel; the local pivot rows
+    park in scratch for the write-back's row-swap replay."""
+    key = op.buffers_written[0]
+    buf = np.array(st.bufs[key])
+    st.scratch[("piv", ref.index)] = getrf_panel(buf)
+    st.bufs[key] = jnp.asarray(buf)
+
+
+@register_op_handler("lu_trsm")
+def _lu_trsm_handler(st: ExecState, op: Op, ref: BlockRef) -> None:
+    """LU row-panel solve: U[k, k+1:] <- inv(unit-lower Lkk) @ U[k, k+1:],
+    with Lkk read from the resident factored panel."""
+    pkey, ukey = op.buffers_read
+    pnl = np.asarray(st.bufs[pkey])
+    urow = np.asarray(st.bufs[ukey])
+    d = pnl.shape[1]
+    lkk = np.tril(pnl[:d, :d], -1) + np.eye(d, dtype=pnl.dtype)
+    st.bufs[ukey] = jnp.asarray(
+        np.linalg.solve(lkk, urow).astype(urow.dtype))
+
+
+@register_op_handler("lu_writeback")
+def _lu_writeback_handler(st: ExecState, op: Op, ref: BlockRef) -> None:
+    """LU panel write-back with row-swap replay: land the factored panel and
+    apply its pivots to the host columns *outside* the panel (left of it:
+    already-written L; right of it: the not-yet-updated trailing columns),
+    accumulating the global permutation in scratch."""
+    A = st.outputs["A"]
+    n = A.shape[0]
+    buf = np.asarray(st.bufs[op.buffers_read[0]])
+    pw = buf.shape[1]
+    k0 = n - buf.shape[0]
+    k1 = k0 + pw
+    piv = st.scratch.pop(("piv", ref.index))
+    perm = st.scratch.setdefault("perm", np.arange(n))
+    apply_panel_pivots(A, piv, k0, k1, perm)
+    A[k0:, k0:k1] = buf.astype(A.dtype)
 
 
 @register_runtime("HBM")

@@ -28,7 +28,8 @@ from repro.tune.calibrate import (
     phi_profile,
     tpu_v5e_profile,
 )
-from repro.tune.search import TunedPlan, search_attention, search_gemm
+from repro.tune.search import (TunedPlan, search_attention, search_factor,
+                               search_gemm)
 from repro.tune.space import (
     AttentionCandidate,
     GemmCandidate,
@@ -42,6 +43,6 @@ __all__ = [
     "HardwareProfile", "PlanCache", "TunedPlan", "attention_search_space",
     "calibrate", "default_cache_path", "gemm_search_space",
     "get_default_tuner", "gpu_profile", "hardware_fingerprint",
-    "phi_profile", "search_attention", "search_gemm", "set_default_tuner",
-    "tpu_v5e_profile",
+    "phi_profile", "search_attention", "search_factor", "search_gemm",
+    "set_default_tuner", "tpu_v5e_profile",
 ]

@@ -21,6 +21,7 @@ from __future__ import annotations
 import json
 import os
 import tempfile
+import threading
 from typing import Dict, Optional, Sequence
 
 from repro.tune.search import TunedPlan
@@ -45,6 +46,11 @@ class PlanCache:
         self.hits = 0
         self.misses = 0
         self._mem: Optional[Dict[str, dict]] = None
+        # serializes load-modify-store within this instance; across
+        # instances (or processes) the atomic os.replace below keeps the
+        # store parseable — a racing writer can lose its update, never
+        # corrupt the file
+        self._lock = threading.Lock()
 
     @staticmethod
     def key(kernel: str, problem: Sequence[int], dtype: str, tier: str,
@@ -81,31 +87,36 @@ class PlanCache:
 
     # -- API ----------------------------------------------------------------
     def get(self, key: str) -> Optional[TunedPlan]:
-        raw = self._load().get(key)
-        if raw is None:
-            self.misses += 1
-            return None
-        try:
-            plan = TunedPlan.from_json(raw)
-        except (TypeError, KeyError, ValueError):
-            self.misses += 1   # schema drift: treat as miss, will overwrite
-            return None
-        self.hits += 1
-        return plan
+        with self._lock:           # counters update under the lock too, so
+            raw = self._load().get(key)   # concurrent gets never lose a tick
+            if raw is None:
+                self.misses += 1
+                return None
+            try:
+                plan = TunedPlan.from_json(raw)
+            except (TypeError, KeyError, ValueError):
+                self.misses += 1   # schema drift: treat as miss, overwrite
+                return None
+            self.hits += 1
+            return plan
 
     def put(self, key: str, plan: TunedPlan) -> None:
-        self._load()[key] = plan.to_json()
-        self._store()
+        with self._lock:
+            self._load()[key] = plan.to_json()
+            self._store()
 
     def clear(self) -> None:
-        self._mem = {}
-        try:
-            os.unlink(self.path)
-        except OSError:
-            pass
+        with self._lock:
+            self._mem = {}
+            try:
+                os.unlink(self.path)
+            except OSError:
+                pass
 
     def __len__(self) -> int:
-        return len(self._load())
+        with self._lock:
+            return len(self._load())
 
     def __contains__(self, key: str) -> bool:
-        return key in self._load()
+        with self._lock:
+            return key in self._load()

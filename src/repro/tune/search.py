@@ -26,8 +26,10 @@ import numpy as np
 from repro.core.partitioner import (AttentionPartition, GemmPartition,
                                     plan_attention_partition,
                                     plan_gemm_partition)
-from repro.core.pipeline import (attention_pipeline_spec, compile_pipeline,
-                                 gemm_pipeline_spec, syrk_pipeline_spec)
+from repro.core.pipeline import (attention_pipeline_spec,
+                                 compile_factor_pipeline, compile_pipeline,
+                                 factor_pipeline_spec, gemm_pipeline_spec,
+                                 syrk_pipeline_spec)
 from repro.core.simulator import simulate
 from repro.tune.calibrate import HardwareProfile
 from repro.tune.space import attention_search_space, gemm_search_space
@@ -177,6 +179,106 @@ def search_gemm(
         params=tuple(sorted({
             "h": cand.part.h, "w": cand.part.w,
             "bm": cand.part.bm, "bn": cand.part.bn,
+        }.items())),
+        makespan=res.makespan,
+        baseline_makespan=baseline,
+        model=profile.name,
+        fingerprint=fingerprint,
+    )
+
+
+def search_factor(
+    kind: str,
+    n: int,
+    panel: int,
+    budget_bytes: int,
+    profile: HardwareProfile,
+    *,
+    dtype: str = "float32",
+    tier: str = "HBM",
+    fingerprint: str = "",
+    nstreams_options: Sequence[int] = (1, 2),
+    nbuf_options: Sequence[int] = (1, 2, 3),
+    lookahead_options: Sequence[int] = (0, 1, 2),
+    max_steps: int = 4096,
+) -> TunedPlan:
+    """Rank whole-factorization pipelines under ``profile``.
+
+    A factorization's trailing shapes *shrink* every panel, so instead of
+    caching one plan per trailing shape (the pre-pipeline wrapper's
+    behavior: a separate search for every ``ooc_syrk`` call), the whole run
+    is one search keyed by ``(n, panel)``: each candidate — panel width
+    ladder x (nstreams, nbuf, lookahead) — compiles the complete
+    multi-panel schedule through the production
+    :func:`~repro.core.pipeline.compile_factor_pipeline` and is timed end
+    to end by ``simulate()``, shrinking grids included.  The plan's params
+    carry the chosen ``panel``/``bm``/``bn``/``lookahead``.
+    """
+    if kind not in ("cholesky", "lu"):
+        raise ValueError(f"search_factor cannot tune kernel {kind!r}")
+    bytes_per_el = np.dtype(dtype).itemsize
+    panels = []
+    pw = min(panel, n)
+    while pw >= 1 and len(panels) < 3:
+        panels.append(pw)
+        pw //= 2
+
+    best = None
+    best_key = None
+    baseline = None       # the hardcoded default, when rankable
+    seq_best = None       # best sequential candidate at the requested panel
+    idx = 0
+    for pw in panels:
+        for ns in nstreams_options:
+            for nb in nbuf_options:
+                for la in lookahead_options:
+                    try:
+                        spec = factor_pipeline_spec(
+                            n, pw, budget_bytes, bytes_per_el,
+                            kind=kind, lookahead=la, nbuf=nb)
+                    except ValueError:
+                        continue
+                    sched = compile_factor_pipeline(spec, nstreams=ns,
+                                                    nbuf=nb)
+                    if len(sched.ops) > max_steps:
+                        continue
+                    res = simulate(sched, profile.model_for(ns))
+                    # sequential default: the per-panel loop every entry
+                    # point ran before lookahead existed
+                    if pw == panels[0] and ns == 2 and nb == 2 and la == 0:
+                        baseline = res.makespan
+                    if pw == panels[0] and la == 0 and (
+                            seq_best is None or res.makespan < seq_best):
+                        seq_best = res.makespan
+                    key = (res.makespan, ns, nb, la, -spec.bm, -spec.bn,
+                           idx)
+                    if best_key is None or key < best_key:
+                        best, best_key = (spec, ns, nb, res), key
+                    idx += 1
+    if best is None:
+        raise ValueError(
+            f"no feasible {kind} pipeline for n={n}, panel<={panel} "
+            f"within {budget_bytes}B (max_steps={max_steps})")
+
+    spec, ns, nb, res = best
+    if baseline is None:
+        # the exact (ns=2, nb=2, la=0) default was outside the option sets
+        # or infeasible: fall back to the best sequential candidate, then
+        # to the winner itself — the field must stay finite and
+        # JSON-portable
+        baseline = seq_best if seq_best is not None else res.makespan
+    return TunedPlan(
+        kernel=f"{kind}-factor",
+        problem=(n, panel),
+        dtype=dtype,
+        tier=tier,
+        budget=budget_bytes,
+        nstreams=ns,
+        nbuf=nb,
+        write_back=True,
+        params=tuple(sorted({
+            "panel": spec.panel, "bm": spec.bm, "bn": spec.bn,
+            "lookahead": spec.lookahead,
         }.items())),
         makespan=res.makespan,
         baseline_makespan=baseline,

@@ -23,7 +23,8 @@ import numpy as np
 from repro.tune.cache import PlanCache
 from repro.tune.calibrate import (CalibrationResult, HardwareProfile,
                                   calibrate, hardware_fingerprint)
-from repro.tune.search import TunedPlan, search_attention, search_gemm
+from repro.tune.search import (TunedPlan, search_attention, search_factor,
+                               search_gemm)
 
 
 class AutoTuner:
@@ -105,6 +106,34 @@ class AutoTuner:
                   dtype: str = "float32") -> TunedPlan:
         return self.gemm_plan(n, n, K, budget_bytes, dtype=dtype,
                               kernel="syrk")
+
+    def factor_plan(self, kind: str, n: int, panel: int, budget_bytes: int,
+                    dtype: str = "float32") -> TunedPlan:
+        """Whole-factorization plan (panel width, trailing block dims,
+        streams/buffers, lookahead depth) for ``ooc_cholesky`` / ``ooc_lu``.
+
+        One cache key — ``<kind>-factor:<n>x<panel>:...`` — covers every
+        shrinking per-panel trailing shape, because the search simulates the
+        complete multi-panel schedule rather than ranking each trailing
+        SYRK/GEMM in isolation (the shrinking-dims path: a factorization
+        would otherwise fill the cache with one entry per panel)."""
+        dtype = np.dtype(dtype).name
+        key = PlanCache.key(f"{kind}-factor", (n, panel), dtype, self.tier,
+                            budget_bytes, self.fingerprint)
+        plan = self.cache.get(key)
+        if plan is not None:
+            self.last_from_cache = True
+            return plan
+        self.last_from_cache = False
+        self.searches += 1
+        plan = search_factor(
+            kind, n, panel, budget_bytes, self.profile,
+            dtype=dtype, tier=self.tier, fingerprint=self.fingerprint,
+            nstreams_options=self.nstreams_options,
+            nbuf_options=self.nbuf_options,
+            max_steps=max(self.max_steps, 4096))
+        self.cache.put(key, plan)
+        return plan
 
     def attention_plan(self, seq_len: int, kv_heads: int, head_dim: int,
                        q_heads: int, budget_bytes: int,
