@@ -13,6 +13,10 @@ Prints ``name,us_per_call,derived`` CSV:
   bench_tune        — autotuner: tuned vs default makespans (C5 selection)
   bench_hybrid      — hybrid co-scheduling: balanced split vs best single
                       device (beyond paper; DESIGN.md §7)
+  bench_reuse       — block cache + traversal order: H2D bytes-moved and
+                      hit-rate vs the naive schedule (DESIGN.md §9); rows
+                      land in benchmarks/bench_reuse.json so the perf
+                      trajectory tracks traffic, not just makespan
 """
 
 from __future__ import annotations
@@ -23,14 +27,15 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_hybrid, bench_loc, bench_overhead,
-                            bench_pipeline, bench_roofline, bench_simulate,
-                            bench_transition, bench_tune, bench_validate)
+                            bench_pipeline, bench_reuse, bench_roofline,
+                            bench_simulate, bench_transition, bench_tune,
+                            bench_validate)
 
     print("name,us_per_call,derived")
     failures = 0
     for mod in (bench_overhead, bench_transition, bench_pipeline,
                 bench_loc, bench_roofline, bench_validate, bench_simulate,
-                bench_tune, bench_hybrid):
+                bench_tune, bench_hybrid, bench_reuse):
         try:
             for row in mod.run():
                 derived = str(row["derived"]).replace(",", ";")

@@ -12,6 +12,14 @@ Three span sources, one trace format (``repro.core.trace``):
     the canned gpu+phi profile pair: one trace *process* (lane-group, pid =
     device index) per device, so the balanced concurrent timelines sit side
     by side without stream-id collisions.
+  * ``--mode factor`` — engine-model spans of a whole factorization
+    schedule (``--kind cholesky|lu``): panel ops, lookahead overlap and the
+    streamed trailing update on one timeline.
+
+GEMM and factor traces carry the schedule's block-cache counters as an
+instant "reuse" annotation (hits = transfers *not* on the timeline);
+``--traversal``/``--evict`` pick the step order and eviction policy so the
+elided-transfer effect is visible by diffing two exports.
 
 Open the output at chrome://tracing or https://ui.perfetto.dev.
 
@@ -27,10 +35,11 @@ import json
 
 import numpy as np
 
-from repro.core import (HostOocRuntime, ScheduleExecutor,
-                        build_gemm_schedule, gpu_like, phi_like,
-                        plan_gemm_partition, simulate, tpu_v5e_ici,
-                        tpu_v5e_vmem, write_chrome_trace)
+from repro.core import (EVICT_POLICIES, TRAVERSALS, HostOocRuntime,
+                        ScheduleExecutor, build_gemm_schedule,
+                        compile_factor_pipeline, factor_pipeline_spec,
+                        gpu_like, phi_like, plan_gemm_partition, simulate,
+                        tpu_v5e_ici, tpu_v5e_vmem, write_chrome_trace)
 
 HW = {
     "gpu": lambda ns: gpu_like(),
@@ -61,9 +70,28 @@ def _hybrid_mode(args) -> None:
           f"devices (one lane-group each)")
 
 
+def _factor_mode(args) -> None:
+    budget = int(args.budget_mb * 2**20)
+    spec = factor_pipeline_spec(args.n, args.panel, budget, 4,
+                                kind=args.kind, lookahead=args.lookahead,
+                                nbuf=args.nbuf)
+    sched = compile_factor_pipeline(spec, nstreams=args.nstreams,
+                                    nbuf=args.nbuf, evict=args.evict)
+    res = simulate(sched, HW[args.hw](args.nstreams))
+    name = (f"{args.kind} n={args.n} panel={spec.panel} "
+            f"la{spec.lookahead} s{args.nstreams}b{args.nbuf} {args.evict}")
+    reuse = sched.reuse.get("Fr", {})
+    print(f"{name}: {len(sched.ops)} ops, simulated makespan "
+          f"{res.makespan*1e3:.2f} ms on {args.hw}; factored-row cache "
+          f"{reuse.get('hits', 0)} hits / {reuse.get('misses', 0)} "
+          f"transfers")
+    write_chrome_trace(args.out, res.op_spans, process_name=name,
+                       reuse=sched.reuse)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--mode", choices=("sim", "exec", "hybrid"),
+    ap.add_argument("--mode", choices=("sim", "exec", "hybrid", "factor"),
                     default="sim")
     ap.add_argument("--M", type=int, default=2048)
     ap.add_argument("--N", type=int, default=2048)
@@ -71,6 +99,18 @@ def main() -> None:
     ap.add_argument("--budget-mb", type=float, default=16.0)
     ap.add_argument("--nstreams", type=int, default=2)
     ap.add_argument("--nbuf", type=int, default=2)
+    ap.add_argument("--traversal", choices=TRAVERSALS, default="col",
+                    help="block-grid step order (sim/exec modes)")
+    ap.add_argument("--evict", choices=EVICT_POLICIES, default="lru",
+                    help="block-cache eviction policy (sim/exec/factor)")
+    ap.add_argument("--kind", choices=("cholesky", "lu"), default="cholesky",
+                    help="factorization kind for --mode factor")
+    ap.add_argument("--n", type=int, default=2048,
+                    help="matrix order for --mode factor")
+    ap.add_argument("--panel", type=int, default=256,
+                    help="panel width for --mode factor")
+    ap.add_argument("--lookahead", type=int, default=1,
+                    help="lookahead depth for --mode factor")
     ap.add_argument("--hw", choices=sorted(HW), default="gpu",
                     help="hardware model for --mode sim")
     ap.add_argument("-o", "--out", default="trace.json")
@@ -81,14 +121,20 @@ def main() -> None:
         print(f"wrote {args.out} — load at chrome://tracing or "
               f"ui.perfetto.dev")
         return
+    if args.mode == "factor":
+        _factor_mode(args)
+        print(f"wrote {args.out} — load at chrome://tracing or "
+              f"ui.perfetto.dev")
+        return
 
     budget = int(args.budget_mb * 2**20)
     bpe = 4
     part = plan_gemm_partition(args.M, args.N, args.K, budget, bpe,
                                nbuf=args.nbuf, nstreams=args.nstreams)
-    sched = build_gemm_schedule(part, nstreams=args.nstreams, nbuf=args.nbuf)
+    sched = build_gemm_schedule(part, nstreams=args.nstreams, nbuf=args.nbuf,
+                                traversal=args.traversal, evict=args.evict)
     name = (f"gemm {args.M}x{args.N}x{args.K} h{part.h}xw{part.w} "
-            f"s{args.nstreams}b{args.nbuf}")
+            f"s{args.nstreams}b{args.nbuf} {args.traversal}/{args.evict}")
 
     if args.mode == "sim":
         res = simulate(sched, HW[args.hw](args.nstreams))
@@ -107,7 +153,8 @@ def main() -> None:
         total = max(e for _, _, _, e in spans)
         print(f"{name}: {len(spans)} ops executed in {total*1e3:.1f} ms wall")
 
-    write_chrome_trace(args.out, spans, process_name=name)
+    write_chrome_trace(args.out, spans, process_name=name,
+                       reuse=sched.reuse)
     print(f"wrote {args.out} — load at chrome://tracing or ui.perfetto.dev")
 
 

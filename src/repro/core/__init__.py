@@ -15,12 +15,16 @@ from repro.core.oocgemm import is_in_core, ooc_gemm, ooc_syrk, plan_for_device
 from repro.core.ooc_attention import ooc_attention
 from repro.core.ooc_factor import ooc_cholesky, ooc_lu
 from repro.core.partitioner import (
+    TRAVERSALS,
     AttentionPartition,
     GemmPartition,
     plan_attention_partition,
     plan_gemm_partition,
+    traversal_order,
 )
 from repro.core.pipeline import (
+    EVICT_POLICIES,
+    BlockCache,
     ComputeStage,
     FactorPipelineSpec,
     PipelineSpec,
@@ -81,12 +85,13 @@ from repro.core.streams import (
 )
 
 __all__ = [
-    "AttentionPartition", "BlockRef", "ComputeStage", "Device", "Event",
+    "AttentionPartition", "BlockCache", "BlockRef", "ComputeStage",
+    "Device", "EVICT_POLICIES", "Event",
     "ExecState", "FactorPipelineSpec", "GemmPartition", "HardwareModel",
     "HostOocRuntime", "MeshOocRuntime", "Op", "OpKind", "OocRuntime",
     "PipelineSpec", "RuntimeFactory", "Schedule", "ScheduleError",
     "ScheduleExecutor", "SimResult", "SliceRef", "Stream", "StreamFactory",
-    "StreamedOperand", "VmemOocRuntime", "WriteBack",
+    "StreamedOperand", "TRAVERSALS", "VmemOocRuntime", "WriteBack",
     "attention_pipeline_spec", "build_attention_schedule",
     "build_gemm_schedule", "build_syrk_schedule", "build_vendor_schedule",
     "chrome_trace", "chrome_trace_groups", "compile_factor_pipeline",
@@ -95,7 +100,7 @@ __all__ = [
     "ooc_lu", "ooc_syrk", "phi_like", "plan_attention_partition",
     "plan_for_device", "plan_gemm_partition", "register_op_handler",
     "register_runtime", "schedule_stats", "simulate", "simulate_reference",
-    "syrk_pipeline_spec", "tpu_v5e_ici", "tpu_v5e_vmem",
+    "syrk_pipeline_spec", "tpu_v5e_ici", "tpu_v5e_vmem", "traversal_order",
     "validate_schedule", "vendor_pipeline_spec", "write_chrome_trace",
     "write_chrome_trace_groups",
 ]

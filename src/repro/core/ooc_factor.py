@@ -65,9 +65,9 @@ def _plan_factor_spec(kind: str, n: int, panel: int, budget_bytes: int,
 
 def _tuned_factor_spec(tuner, kind: str, n: int, panel: int,
                        budget_bytes: int, bytes_per_el: int,
-                       dtype) -> Tuple[FactorPipelineSpec, int, int]:
-    """(spec, nstreams, nbuf) from the autotuner's factor plan — one cached
-    search covers every shrinking per-panel trailing shape."""
+                       dtype) -> Tuple[FactorPipelineSpec, int, int, str]:
+    """(spec, nstreams, nbuf, evict) from the autotuner's factor plan — one
+    cached search covers every shrinking per-panel trailing shape."""
     if tuner is None:
         from repro.tune import get_default_tuner
         tuner = get_default_tuner()
@@ -77,14 +77,15 @@ def _tuned_factor_spec(tuner, kind: str, n: int, panel: int,
         n, plan.param("panel"), budget_bytes, bytes_per_el, kind=kind,
         lookahead=plan.param("lookahead"), nbuf=plan.nbuf,
         bm=plan.param("bm"), bn=plan.param("bn"))
-    return spec, plan.nstreams, plan.nbuf
+    return spec, plan.nstreams, plan.nbuf, plan.evict
 
 
 def _run_factor(A: np.ndarray, spec: FactorPipelineSpec, nstreams: int,
-                nbuf: int, validate: bool):
+                nbuf: int, validate: bool, evict: str = "lru"):
     """Compile + execute the factor schedule over a copy of ``A``; returns
     (factored matrix, executor state) — LU's permutation rides in scratch."""
-    sched = plib.compile_factor_pipeline(spec, nstreams=nstreams, nbuf=nbuf)
+    sched = plib.compile_factor_pipeline(spec, nstreams=nstreams, nbuf=nbuf,
+                                         evict=evict)
     if validate:
         validate_schedule(sched)
     out = np.array(A, copy=True)
@@ -104,7 +105,7 @@ def _check_square(A) -> int:
 def ooc_cholesky(A, panel: int = 256, *, budget_bytes: int,
                  backend: str = "host", tune=None, tuner=None,
                  lookahead: int = 1, nstreams: int = 2, nbuf: int = 2,
-                 validate: bool = False,
+                 evict: str = "lru", validate: bool = False,
                  devices: Optional[Sequence] = None,
                  tolerance: Optional[float] = None) -> np.ndarray:
     """Lower-triangular Cholesky factor of SPD ``A`` (host-resident).
@@ -114,6 +115,9 @@ def ooc_cholesky(A, panel: int = 256, *, budget_bytes: int,
     trailing update; ``lookahead=0`` degenerates to the sequential
     per-panel loop.  ``tune="auto"`` resolves panel width, trailing block
     dims, stream count, buffer depth and lookahead from the autotuner.
+    ``evict`` picks the factored-row block cache's eviction policy
+    (``"lru"``/``"belady"``) — it changes only H2D traffic, never the
+    factor; tuned plans carry their own.
 
     ``devices=[...]`` (or a non-host ``backend``) falls back to the
     per-panel loop with the trailing update executed by
@@ -134,19 +138,19 @@ def ooc_cholesky(A, panel: int = 256, *, budget_bytes: int,
                               devices, tolerance)
     bpe = np.dtype(A.dtype).itemsize
     if tune == "auto":
-        spec, nstreams, nbuf = _tuned_factor_spec(
+        spec, nstreams, nbuf, evict = _tuned_factor_spec(
             tuner, "cholesky", n, panel, budget_bytes, bpe, A.dtype)
     else:
         spec = _plan_factor_spec("cholesky", n, panel, budget_bytes, bpe,
                                  lookahead, nbuf)
-    out, _ = _run_factor(A, spec, nstreams, nbuf, validate)
+    out, _ = _run_factor(A, spec, nstreams, nbuf, validate, evict=evict)
     return np.tril(out)
 
 
 def ooc_lu(A, panel: int = 256, *, budget_bytes: int,
            backend: str = "host", tune=None, tuner=None,
            lookahead: int = 1, nstreams: int = 2, nbuf: int = 2,
-           validate: bool = False,
+           evict: str = "lru", validate: bool = False,
            devices: Optional[Sequence] = None,
            tolerance: Optional[float] = None
            ) -> Tuple[np.ndarray, np.ndarray]:
@@ -176,12 +180,12 @@ def ooc_lu(A, panel: int = 256, *, budget_bytes: int,
                         devices, tolerance)
     bpe = np.dtype(A.dtype).itemsize
     if tune == "auto":
-        spec, nstreams, nbuf = _tuned_factor_spec(
+        spec, nstreams, nbuf, evict = _tuned_factor_spec(
             tuner, "lu", n, panel, budget_bytes, bpe, A.dtype)
     else:
         spec = _plan_factor_spec("lu", n, panel, budget_bytes, bpe,
                                  lookahead, nbuf)
-    out, state = _run_factor(A, spec, nstreams, nbuf, validate)
+    out, state = _run_factor(A, spec, nstreams, nbuf, validate, evict=evict)
     return out, state.scratch.get("perm", np.arange(n))
 
 

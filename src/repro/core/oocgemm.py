@@ -35,10 +35,12 @@ def is_in_core(M: int, N: int, K: int, budget_bytes: int,
     return (M * K + K * N + M * N) * bytes_per_el <= budget_bytes
 
 
-def _tuned_gemm_config(tuner, kernel: str, M: int, N: int, K: int,
-                       budget_bytes: int, dtype) -> Tuple[GemmPartition, int, int]:
-    """Resolve (partition, nstreams, nbuf) from the (default) autotuner's
-    plan cache — searched once per (shape, dtype, tier, hardware)."""
+def _tuned_gemm_config(
+        tuner, kernel: str, M: int, N: int, K: int, budget_bytes: int,
+        dtype) -> Tuple[GemmPartition, int, int, str, str]:
+    """Resolve (partition, nstreams, nbuf, traversal, evict) from the
+    (default) autotuner's plan cache — searched once per (shape, dtype,
+    tier, hardware)."""
     if tuner is None:
         from repro.tune import get_default_tuner
         tuner = get_default_tuner()
@@ -50,7 +52,8 @@ def _tuned_gemm_config(tuner, kernel: str, M: int, N: int, K: int,
         raise ValueError(
             f"tuned plan for {kernel} {(M, N, K)} was searched with "
             f"write_back=False; ooc_{kernel} requires write-back plans")
-    return plan.gemm_partition(), plan.nstreams, plan.nbuf
+    return (plan.gemm_partition(), plan.nstreams, plan.nbuf,
+            plan.traversal, plan.evict)
 
 
 def _hybrid_kwargs(tolerance: Optional[float]) -> dict:
@@ -68,6 +71,8 @@ def ooc_gemm(
     backend: str = "host",
     nstreams: int = 2,
     nbuf: int = 2,
+    traversal: str = "col",
+    evict: str = "lru",
     mesh=None,
     validate: bool = False,
     runtime: Optional[OocRuntime] = None,
@@ -95,6 +100,12 @@ def ooc_gemm(
     each band runs its own tuned schedule concurrently, and the disjoint
     bands merge into one result.  Per-device budgets come from the specs,
     so ``budget_bytes`` and ``backend`` are ignored on this path.
+
+    traversal / evict (host backend): block-grid step order (see
+    :data:`~repro.core.partitioner.TRAVERSALS`) and residency-cache
+    eviction policy (``"lru"``/``"belady"``) — they change which H2D
+    transfers the compiler's block cache elides, never the result.  Tuned
+    plans carry their own searched traversal/evict and override these.
     """
     if tune not in (None, "auto"):
         raise ValueError(f"unknown tune mode {tune!r}; expected None/'auto'")
@@ -132,12 +143,13 @@ def ooc_gemm(
         return np.asarray(out) if backend == "host" else out
 
     if tune == "auto" and backend == "host":
-        part, nstreams, nbuf = _tuned_gemm_config(
+        part, nstreams, nbuf, traversal, evict = _tuned_gemm_config(
             tuner, "gemm", M, N, K, budget_bytes, A.dtype)
     else:
         part = plan_gemm_partition(M, N, K, budget_bytes, bpe)
     if backend == "host":
-        sched = plib.build_gemm_schedule(part, nstreams=nstreams, nbuf=nbuf)
+        sched = plib.build_gemm_schedule(part, nstreams=nstreams, nbuf=nbuf,
+                                         traversal=traversal, evict=evict)
         if validate:
             validate_schedule(sched)
         rt = runtime or HostOocRuntime()
@@ -158,6 +170,8 @@ def ooc_syrk(
     backend: str = "host",
     nstreams: int = 2,
     nbuf: int = 2,
+    traversal: str = "col",
+    evict: str = "lru",
     validate: bool = False,
     runtime: Optional[OocRuntime] = None,
     tune: Optional[str] = None,
@@ -182,6 +196,9 @@ def ooc_syrk(
     devices: as in :func:`ooc_gemm` — co-execute across a heterogeneous
     device set, splitting C's rows by calibrated profile (each band's
     transposed panel still streams the full P, block by block).
+
+    traversal / evict: as in :func:`ooc_gemm` — step order and block-cache
+    eviction policy for the host pipeline; tuned plans override both.
     """
     if tune not in (None, "auto"):
         raise ValueError(f"unknown tune mode {tune!r}; expected None/'auto'")
@@ -211,12 +228,13 @@ def ooc_syrk(
         return np.asarray(out) if backend == "host" else out
 
     if tune == "auto" and backend == "host":
-        part, nstreams, nbuf = _tuned_gemm_config(
+        part, nstreams, nbuf, traversal, evict = _tuned_gemm_config(
             tuner, "syrk", n, n, K, budget_bytes, P.dtype)
     else:
         part = plan_gemm_partition(n, n, K, budget_bytes, bpe)
     if backend == "host":
-        sched = plib.build_syrk_schedule(part, nstreams=nstreams, nbuf=nbuf)
+        sched = plib.build_syrk_schedule(part, nstreams=nstreams, nbuf=nbuf,
+                                         traversal=traversal, evict=evict)
         if validate:
             validate_schedule(sched)
         rt = runtime or HostOocRuntime()

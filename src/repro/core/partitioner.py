@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 # TPU tiling constants (fp32/bf16 lane/sublane granularity).
 LANE = 128
@@ -108,6 +108,72 @@ class GemmPartition:
                 rs, rn = self.block_rows(i)
                 cs, cn = self.block_cols(j)
                 yield i, j, rs, rn, cs, cn
+
+
+# ---------------------------------------------------------------------------
+# Traversal orders — the lever that controls operand reuse distance
+# ---------------------------------------------------------------------------
+# The paper's Fig. 2 fixes column-major order (B transfers once per column).
+# With a residency-tracking compiler (pipeline.BlockCache) the traversal
+# decides which recurrences land inside the cache capacity: serpentine keeps
+# the A row live across a column boundary, a blocked band of height <= nbuf
+# keeps every A row of the band live for the whole sweep, Z-Morton is the
+# cache-oblivious compromise when nbuf is unknown.
+TRAVERSALS = ("col", "row", "serpentine", "blocked", "zmorton")
+
+
+def _morton_key(i: int, j: int) -> int:
+    key = 0
+    for bit in range(max(i.bit_length(), j.bit_length(), 1)):
+        key |= ((i >> bit) & 1) << (2 * bit + 1)
+        key |= ((j >> bit) & 1) << (2 * bit)
+    return key
+
+
+def traversal_order(h: int, w: int, traversal: str = "col",
+                    band: Optional[int] = None) -> List[Tuple[int, int]]:
+    """Visit order of the ``h x w`` C-block grid as ``(i, j)`` pairs.
+
+    * ``col``        — the paper's order: ``for j: for i``.
+    * ``row``        — ``for i: for j`` (B-heavy; useful when h < w).
+    * ``serpentine`` — column-major with alternating row direction, so the
+      A row at each column boundary repeats back-to-back.
+    * ``blocked``    — row bands of height ``band`` (default 2), columns
+      swept serpentine *across bands*: with ``band <= nbuf`` every A row of
+      a band stays resident for its whole sweep, and the B ping-pong hits
+      at each band boundary.
+    * ``zmorton``    — cells sorted by bit-interleaved (i, j): bounded reuse
+      distance in both operands without knowing the buffer depth.
+
+    Every order is a permutation of the grid, so the set of computed blocks
+    (and the result) is identical; only transfer traffic changes.
+    """
+    if h < 1 or w < 1:
+        raise ValueError(f"bad grid {h}x{w}")
+    if traversal == "col":
+        return [(i, j) for j in range(w) for i in range(h)]
+    if traversal == "row":
+        return [(i, j) for i in range(h) for j in range(w)]
+    if traversal == "serpentine":
+        out: List[Tuple[int, int]] = []
+        for j in range(w):
+            rng = range(h) if j % 2 == 0 else range(h - 1, -1, -1)
+            out.extend((i, j) for i in rng)
+        return out
+    if traversal == "blocked":
+        b = max(1, band or 2)
+        out = []
+        for nb, b0 in enumerate(range(0, h, b)):
+            i_rng = range(b0, min(b0 + b, h))
+            j_rng = range(w) if nb % 2 == 0 else range(w - 1, -1, -1)
+            for j in j_rng:
+                out.extend((i, j) for i in i_rng)
+        return out
+    if traversal == "zmorton":
+        return sorted(((i, j) for i in range(h) for j in range(w)),
+                      key=lambda ij: _morton_key(*ij))
+    raise ValueError(
+        f"unknown traversal {traversal!r}; expected one of {TRAVERSALS}")
 
 
 def _round_up(x: int, m: int) -> int:

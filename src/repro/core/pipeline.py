@@ -32,9 +32,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, Iterable, List, Optional, Tuple
+from typing import (Callable, Dict, Hashable, Iterable, List, Optional,
+                    Tuple)
 
-from repro.core.partitioner import AttentionPartition, GemmPartition
+from repro.core.partitioner import (AttentionPartition, GemmPartition,
+                                    traversal_order)
 from repro.core.streams import (
     BlockRef,
     Device,
@@ -134,6 +136,7 @@ class PipelineSpec:
     compute: ComputeStage
     writeback: WriteBack
     budget: int = 0
+    traversal: str = "col"  # step order over the block grid (reporting only)
 
     def operand(self, name: str) -> StreamedOperand:
         for x in self.operands:
@@ -145,6 +148,113 @@ class PipelineSpec:
 # ===========================================================================
 # Spec -> Schedule compiler
 # ===========================================================================
+EVICT_POLICIES = ("lru", "belady")
+
+
+class BlockCache:
+    """Compile-time model of one operand class's device-resident blocks.
+
+    Generalizes the paper's parity-buffer rule (block ``idx`` lives in buffer
+    ``idx % nbuf``, evicting ``idx - nbuf``) to true residency tracking: a
+    block stays usable in its slot until capacity forces replacement, so any
+    later step that consumes it again skips its H2D entirely — not just the
+    immediately following step.
+
+    ``access`` is called once per (step, operand) in schedule order and
+    returns hit/miss plus, on an evicting miss, the events proving the
+    evicted occupant's last consumer on every stream has finished — the
+    residency-aware generalization of ``hclWaitEvent(eA[idx-1])``.
+
+    Policies: "lru" evicts the least-recently-used slot; "belady" evicts the
+    slot whose next use lies furthest in the future (MIN).  Schedules are
+    static, so the full access sequence — and hence the Belady oracle — is
+    known exactly at compile time.
+    """
+
+    def __init__(self, name: str, capacity: int, policy: str,
+                 accesses: List[Hashable]):
+        if policy not in EVICT_POLICIES:
+            raise ValueError(f"unknown eviction policy {policy!r}; "
+                             f"expected one of {EVICT_POLICIES}")
+        if capacity < 1:
+            raise ValueError("cache capacity must be >= 1")
+        self.name = name
+        self.capacity = capacity
+        self.policy = policy
+        # next_use[t]: position of the next access to the same block after t
+        # (inf if never again) — Belady's oracle, from one backward sweep.
+        self.next_use: List[float] = [math.inf] * len(accesses)
+        nxt: Dict[Hashable, int] = {}
+        for t in range(len(accesses) - 1, -1, -1):
+            self.next_use[t] = nxt.get(accesses[t], math.inf)
+            nxt[accesses[t]] = t
+        self.slots: List[Optional[dict]] = [None] * capacity
+        self.where: Dict[Hashable, int] = {}
+        self.hits = 0
+        self.misses = 0
+        self.bytes_moved = 0
+        self.bytes_saved = 0
+
+    def access(self, t: int, block: Hashable,
+               nbytes: int) -> Tuple[int, bool, Tuple[Event, ...]]:
+        """Process the access at sequence position ``t``.
+
+        Returns ``(slot, hit, evict_waits)``; ``evict_waits`` is non-empty
+        only when the miss replaces a live occupant.
+        """
+        if block in self.where:
+            slot = self.where[block]
+            entry = self.slots[slot]
+            entry["last"] = t
+            entry["next"] = self.next_use[t]
+            self.hits += 1
+            self.bytes_saved += nbytes
+            return slot, True, ()
+        self.misses += 1
+        self.bytes_moved += nbytes
+        waits: Tuple[Event, ...] = ()
+        slot = next((i for i, e in enumerate(self.slots) if e is None), None)
+        if slot is None:
+            slot = self._victim()
+            old = self.slots[slot]
+            del self.where[old["block"]]
+            waits = tuple(old["released"].values())
+        self.slots[slot] = {"block": block, "last": t,
+                            "next": self.next_use[t], "released": {},
+                            "landing": None}
+        self.where[block] = slot
+        return slot, False, waits
+
+    def _victim(self) -> int:
+        if self.policy == "lru":
+            return min(range(self.capacity),
+                       key=lambda i: self.slots[i]["last"])
+        # belady: furthest next use goes first (never-used-again = inf wins
+        # immediately); ties break to the lowest slot for determinism
+        return max(range(self.capacity),
+                   key=lambda i: (self.slots[i]["next"], -i))
+
+    def set_landing(self, block: Hashable, event: Event) -> None:
+        """Remember the H2D completion event of ``block``'s current
+        residency; later cache hits wait on it instead of a new transfer."""
+        self.slots[self.where[block]]["landing"] = event
+
+    def landing_event(self, block: Hashable) -> Event:
+        return self.slots[self.where[block]]["landing"]
+
+    def note_release(self, block: Hashable, stream: int,
+                     event: Event) -> None:
+        """Record the latest consumer event of ``block`` per stream.  An
+        eviction waits on exactly these: earlier consumers on the same
+        stream are covered by program order."""
+        self.slots[self.where[block]]["released"][stream] = event
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "bytes_moved": self.bytes_moved,
+                "bytes_saved": self.bytes_saved}
+
+
 class BlockPipelineBuilder:
     """Low-level emitter for the paper's round-robin / parity-buffer shape.
 
@@ -189,21 +299,27 @@ def compile_pipeline(
     nstreams: int = 2,
     nbuf: int = 2,
     device: Optional[Device] = None,
+    evict: str = "lru",
 ) -> Schedule:
     """Compile ``spec`` into an event-correct multi-stream Schedule.
 
     Event wiring, generalizing the paper's five event sets:
 
-      * transfer of operand X block ``b`` records ``rX[b]`` and waits on the
-        release events of block ``b - nbuf_X`` (the parity buffer's previous
-        occupant): its write-back event if X is inout, else the compute
-        events of its last ``min(max(nbuf, nstreams), consumers)`` consuming
-        steps — enough to cover every stream the consumers ran on.
-      * compute at step ``s`` waits every operand's ``r`` event (plus the
+      * each operand class owns a :class:`BlockCache` of its ``nbuf`` device
+        buffers.  A step whose block is still resident emits *no* transfer —
+        its compute waits on the original landing event; a miss emits an H2D
+        recording ``rX[b]`` that waits on the release events of whichever
+        block the cache evicts (write-back event for inout operands, last
+        per-stream compute events otherwise).
+      * compute at step ``s`` waits every operand's landing event (plus the
         previous step's compute event when a carry serializes the stage),
         and records ``e[s]``.
       * write-back per policy: D2H after each step ("each"), a zero-flop
         buffer release ("keep"), or one finalize D2H at the end ("final").
+
+    ``evict`` selects the replacement policy ("lru" or "belady"); the
+    per-class hit/miss/bytes counters land on ``Schedule.reuse`` and the
+    chosen traversal/policy on ``Schedule.meta``.
     """
     dev = device or Device("HBM", 0, spec.budget)
     b = BlockPipelineBuilder(dev, nstreams, nbuf)
@@ -211,39 +327,43 @@ def compile_pipeline(
     ctag = spec.compute.tag or spec.compute.kernel.upper()
     wb = spec.writeback
 
-    # consuming steps per (operand, block): release points for buffer reuse.
-    consumers: Dict[Tuple[str, int], List[int]] = {}
-    for s in range(spec.nsteps):
-        for x in spec.operands:
-            consumers.setdefault((x.name, x.block_of(s)), []).append(s)
+    # one residency cache per operand class, primed with the full (static)
+    # access sequence so the Belady oracle is exact
+    caches: Dict[str, BlockCache] = {}
+    incarnation: Dict[str, Dict[int, int]] = {}
+    for x in spec.operands:
+        caches[x.name] = BlockCache(
+            x.name, x.nbuf or nbuf, evict,
+            [x.block_of(s) for s in range(spec.nsteps)])
+        incarnation[x.name] = {}
 
-    def release_waits(x: StreamedOperand, evicted: int) -> Tuple[Event, ...]:
-        if evicted < 0 or (x.name, evicted) not in consumers:
-            return ()
-        steps = consumers[(x.name, evicted)]
-        if x.inout:
-            return tuple(b.event(f"w{x.name}[{s}]") for s in steps)
-        # the last min(max(nbuf, nstreams), len) consumers cover every stream
-        # consecutive consuming steps were round-robined onto.
-        k = min(max(nbuf, nstreams), len(steps))
-        return tuple(b.event(f"{ev}[{s}]") for s in steps[-k:])
-
+    slot_of: Dict[str, int] = {}
     for s in range(spec.nsteps):
         s_cur = b.compute_stream(s)
         s_xfer = b.transfer_stream(s)
 
-        # -- H2D: bring in each operand block the moment the step needs it
+        # -- H2D: bring in each operand block unless it is still resident
         for x in spec.operands:
             blk = x.block_of(s)
-            if s > 0 and x.block_of(s - 1) == blk:
-                continue  # resident from a previous step (column reuse)
-            xn = x.nbuf or nbuf
+            cache = caches[x.name]
+            slot, hit, evict_waits = cache.access(s, blk, x.bytes_of(blk))
+            slot_of[x.name] = slot
+            if hit:
+                continue  # resident from an earlier step: no transfer
+            # an evicted-then-refetched block needs a fresh event name (and
+            # a distinct tag: spans and error messages key on tags)
+            inc = incarnation[x.name].get(blk, 0)
+            incarnation[x.name][blk] = inc + 1
+            suffix = "" if inc == 0 else f"@{inc}"
+            landing = b.event(f"r{x.name}[{blk}]{suffix}")
+            cache.set_landing(blk, landing)
             b.issue(
-                kind=OpKind.H2D, tag=f"S({x.name.lower()}[{blk}])",
+                kind=OpKind.H2D,
+                tag=f"S({x.name.lower()}[{blk}]){suffix}",
                 stream=s_xfer,
-                waits=release_waits(x, blk - xn),
-                records=b.event(f"r{x.name}[{blk}]"),
-                buffers_written=((x.name, blk % xn),),
+                waits=evict_waits,
+                records=landing,
+                buffers_written=((x.name, slot),),
                 bytes=x.bytes_of(blk),
                 payload=x.slice_of(blk),
             )
@@ -253,15 +373,13 @@ def compile_pipeline(
         waits = []
         for name in spec.compute.reads:
             x = spec.operand(name)
-            blk = x.block_of(s)
-            reads.append((name, blk % (x.nbuf or nbuf)))
-            waits.append(b.event(f"r{name}[{blk}]"))
+            reads.append((name, slot_of[name]))
+            waits.append(caches[name].landing_event(x.block_of(s)))
         writes = []
         if wb.operand is not None:
             x = spec.operand(wb.operand)
-            blk = x.block_of(s)
-            writes.append((wb.operand, blk % (x.nbuf or nbuf)))
-            waits.append(b.event(f"r{wb.operand}[{blk}]"))
+            writes.append((wb.operand, slot_of[wb.operand]))
+            waits.append(caches[wb.operand].landing_event(x.block_of(s)))
         if spec.compute.carry:
             reads.append("carry")
             writes.append("carry")
@@ -284,22 +402,28 @@ def compile_pipeline(
                 stream=s_cur,
                 waits=(b.event(f"{ev}[{s}]"),),
                 records=b.event(f"w{wb.operand}[{s}]"),
-                buffers_read=((wb.operand, blk % (x.nbuf or nbuf)),),
+                buffers_read=((wb.operand, slot_of[wb.operand]),),
                 bytes=x.bytes_of(blk),
                 payload=x.slice_of(blk),
             )
         elif wb.mode == "keep":  # resident C (SUMMA mode); buffer recycles
-            x = spec.operand(wb.operand)
-            blk = x.block_of(s)
             b.issue(
                 kind=OpKind.COMPUTE, tag=f"keep({wb.operand.lower()}[{s}])",
                 stream=s_cur,
                 waits=(b.event(f"{ev}[{s}]"),),
                 records=b.event(f"w{wb.operand}[{s}]"),
-                buffers_read=((wb.operand, blk % (x.nbuf or nbuf)),),
+                buffers_read=((wb.operand, slot_of[wb.operand]),),
                 flops=0,
                 payload=BlockRef(kernel="noop", index=s),
             )
+
+        # -- release registration: the events an eviction must wait on
+        for x in spec.operands:
+            if x.name == wb.operand and wb.mode in ("each", "keep"):
+                rel = b.event(f"w{wb.operand}[{s}]")
+            else:
+                rel = b.event(f"{ev}[{s}]")
+            caches[x.name].note_release(x.block_of(s), s_cur, rel)
 
     if wb.mode == "final":
         b.issue(
@@ -310,6 +434,9 @@ def compile_pipeline(
             bytes=wb.bytes,
             payload=BlockRef(kernel=wb.kernel, index=spec.nsteps - 1),
         )
+    b.sched.meta = {"traversal": getattr(spec, "traversal", "col"),
+                    "evict": evict}
+    b.sched.reuse = {name: c.stats() for name, c in caches.items()}
     return b.sched
 
 
@@ -335,8 +462,57 @@ def _block_accessors(part: GemmPartition):
     return rows, cols, flops
 
 
+def _gemm_identity_operands(part: GemmPartition, traversal: str,
+                            band: Optional[int],
+                            a_name: str, a_slice, a_bytes,
+                            b_name: str, b_slice, b_bytes):
+    """Shared GEMM/SYRK operand construction with *identity* block ids.
+
+    The A role is keyed by block row ``i``, the B role by block column ``j``
+    and C by the canonical block id ``j*h + i`` — so a step revisiting a row
+    or column presents the *same* block id to the compiler's residency cache
+    and its H2D is skipped whenever the block is still resident.  ``order``
+    is the (i, j) step sequence produced by
+    :func:`~repro.core.partitioner.traversal_order`.
+    """
+    bpe = part.bytes_per_el
+    order = traversal_order(part.h, part.w, traversal, band=band)
+    i_of = [ij[0] for ij in order]
+    j_of = [ij[1] for ij in order]
+    cid_of = [j * part.h + i for i, j in order]
+
+    a = StreamedOperand(
+        name=a_name, nblocks=part.h, block_of=lambda s: i_of[s],
+        slice_of=a_slice, bytes_of=a_bytes,
+    )
+    bb = StreamedOperand(
+        name=b_name, nblocks=part.w, block_of=lambda s: j_of[s],
+        slice_of=b_slice, bytes_of=b_bytes,
+        nbuf=2,  # ping-pong regardless of pipeline depth (paper Fig. 2)
+    )
+    c = StreamedOperand(
+        name="C", nblocks=part.nblocks, block_of=lambda s: cid_of[s],
+        slice_of=lambda cid: SliceRef(
+            "C", cid, rows=part.block_rows(cid % part.h),
+            cols=part.block_cols(cid // part.h)),
+        bytes_of=lambda cid: part.block_rows(cid % part.h)[1]
+        * part.block_cols(cid // part.h)[1] * bpe,
+        inout=True,
+    )
+
+    def flops(s):
+        rn = part.block_rows(i_of[s])[1]
+        cn = part.block_cols(j_of[s])[1]
+        return 2 * rn * cn * part.K + 3 * rn * cn
+
+    return a, bb, c, flops
+
+
 def gemm_pipeline_spec(part: GemmPartition,
-                       write_back: bool = True) -> PipelineSpec:
+                       write_back: bool = True,
+                       traversal: str = "col",
+                       band: Optional[int] = None,
+                       reuse: bool = True) -> PipelineSpec:
     """The paper's MMOOC pipeline as a spec.
 
     Stage set per C block (i, j), idx = j*h + i (column-major so each B slice
@@ -347,28 +523,51 @@ def gemm_pipeline_spec(part: GemmPartition,
       S(c_ij)  H2D   once per block              -> records rC[idx]
       DGEMM    COMP  waits rA,rB,rC              -> records eA[idx]
       R(c_ij)  D2H   same stream as DGEMM        -> records wC[idx]
+
+    With ``reuse=True`` (the default) the A/B/C operands carry *identity*
+    block ids (row, column, canonical C id) so the compiler's residency
+    cache can skip re-transfers across non-adjacent steps, and ``traversal``
+    reorders the step sequence to shrink reuse distance (``band`` sizes the
+    "blocked" traversal's row bands).  ``reuse=False`` reproduces the seed
+    compiler's per-step ids — every A/C recurrence re-transfers — and is the
+    naive baseline ``benchmarks/bench_reuse.py`` measures against.
     """
     bpe = part.bytes_per_el
-    rows, cols, flops = _block_accessors(part)
 
-    a = StreamedOperand(
-        name="A", nblocks=part.nblocks, block_of=lambda s: s,
-        slice_of=lambda blk: SliceRef("A", blk, rows=rows(blk)),
-        bytes_of=lambda blk: rows(blk)[1] * part.K * bpe,
-    )
-    bb = StreamedOperand(
-        name="B", nblocks=part.w, block_of=lambda s: s // part.h,
-        slice_of=lambda j: SliceRef("B", j, cols=part.block_cols(j)),
-        bytes_of=lambda j: part.K * part.block_cols(j)[1] * bpe,
-        nbuf=2,  # ping-pong regardless of pipeline depth (paper Fig. 2)
-    )
-    c = StreamedOperand(
-        name="C", nblocks=part.nblocks, block_of=lambda s: s,
-        slice_of=lambda blk: SliceRef("C", blk, rows=rows(blk),
-                                      cols=cols(blk)),
-        bytes_of=lambda blk: rows(blk)[1] * cols(blk)[1] * bpe,
-        inout=True,
-    )
+    if reuse:
+        a, bb, c, flops = _gemm_identity_operands(
+            part, traversal, band,
+            "A",
+            lambda i: SliceRef("A", i, rows=part.block_rows(i)),
+            lambda i: part.block_rows(i)[1] * part.K * bpe,
+            "B",
+            lambda j: SliceRef("B", j, cols=part.block_cols(j)),
+            lambda j: part.K * part.block_cols(j)[1] * bpe,
+        )
+    else:
+        if traversal != "col":
+            raise ValueError(
+                "reuse=False fixes the paper's column-major order "
+                "(the naive baseline)")
+        rows, cols, flops = _block_accessors(part)
+        a = StreamedOperand(
+            name="A", nblocks=part.nblocks, block_of=lambda s: s,
+            slice_of=lambda blk: SliceRef("A", blk, rows=rows(blk)),
+            bytes_of=lambda blk: rows(blk)[1] * part.K * bpe,
+        )
+        bb = StreamedOperand(
+            name="B", nblocks=part.w, block_of=lambda s: s // part.h,
+            slice_of=lambda j: SliceRef("B", j, cols=part.block_cols(j)),
+            bytes_of=lambda j: part.K * part.block_cols(j)[1] * bpe,
+            nbuf=2,
+        )
+        c = StreamedOperand(
+            name="C", nblocks=part.nblocks, block_of=lambda s: s,
+            slice_of=lambda blk: SliceRef("C", blk, rows=rows(blk),
+                                          cols=cols(blk)),
+            bytes_of=lambda blk: rows(blk)[1] * cols(blk)[1] * bpe,
+            inout=True,
+        )
     return PipelineSpec(
         name="gemm",
         nsteps=part.nblocks,
@@ -380,6 +579,7 @@ def gemm_pipeline_spec(part: GemmPartition,
         writeback=WriteBack(mode="each" if write_back else "keep",
                             operand="C"),
         budget=part.budget,
+        traversal=traversal,
     )
 
 
@@ -427,7 +627,10 @@ def attention_pipeline_spec(
 
 def syrk_pipeline_spec(part: GemmPartition,
                        alpha_tag: str = "P",
-                       pt_source: Optional[str] = None) -> PipelineSpec:
+                       pt_source: Optional[str] = None,
+                       traversal: str = "col",
+                       band: Optional[int] = None,
+                       reuse: bool = True) -> PipelineSpec:
     """Blocked SYRK ``C <- alpha * P @ P^T + beta * C`` as a spec.
 
     The Cholesky trailing update, first-class: the same ``dgemm`` handler as
@@ -443,28 +646,44 @@ def syrk_pipeline_spec(part: GemmPartition,
     so the band operand and the full panel must be distinct host arrays.
     """
     bpe = part.bytes_per_el
-    rows, cols, flops = _block_accessors(part)
     pt_src = pt_source or alpha_tag
 
-    pr = StreamedOperand(
-        name="Pr", nblocks=part.nblocks, block_of=lambda s: s,
-        slice_of=lambda blk: SliceRef(alpha_tag, blk, rows=rows(blk)),
-        bytes_of=lambda blk: rows(blk)[1] * part.K * bpe,
-    )
-    pt = StreamedOperand(
-        name="Pt", nblocks=part.w, block_of=lambda s: s // part.h,
-        slice_of=lambda j: SliceRef(pt_src, j, rows=part.block_cols(j),
-                                    transpose=True),
-        bytes_of=lambda j: part.block_cols(j)[1] * part.K * bpe,
-        nbuf=2,
-    )
-    c = StreamedOperand(
-        name="C", nblocks=part.nblocks, block_of=lambda s: s,
-        slice_of=lambda blk: SliceRef("C", blk, rows=rows(blk),
-                                      cols=cols(blk)),
-        bytes_of=lambda blk: rows(blk)[1] * cols(blk)[1] * bpe,
-        inout=True,
-    )
+    if reuse:
+        pr, pt, c, flops = _gemm_identity_operands(
+            part, traversal, band,
+            "Pr",
+            lambda i: SliceRef(alpha_tag, i, rows=part.block_rows(i)),
+            lambda i: part.block_rows(i)[1] * part.K * bpe,
+            "Pt",
+            lambda j: SliceRef(pt_src, j, rows=part.block_cols(j),
+                               transpose=True),
+            lambda j: part.block_cols(j)[1] * part.K * bpe,
+        )
+    else:
+        if traversal != "col":
+            raise ValueError(
+                "reuse=False fixes the paper's column-major order "
+                "(the naive baseline)")
+        rows, cols, flops = _block_accessors(part)
+        pr = StreamedOperand(
+            name="Pr", nblocks=part.nblocks, block_of=lambda s: s,
+            slice_of=lambda blk: SliceRef(alpha_tag, blk, rows=rows(blk)),
+            bytes_of=lambda blk: rows(blk)[1] * part.K * bpe,
+        )
+        pt = StreamedOperand(
+            name="Pt", nblocks=part.w, block_of=lambda s: s // part.h,
+            slice_of=lambda j: SliceRef(pt_src, j, rows=part.block_cols(j),
+                                        transpose=True),
+            bytes_of=lambda j: part.block_cols(j)[1] * part.K * bpe,
+            nbuf=2,
+        )
+        c = StreamedOperand(
+            name="C", nblocks=part.nblocks, block_of=lambda s: s,
+            slice_of=lambda blk: SliceRef("C", blk, rows=rows(blk),
+                                          cols=cols(blk)),
+            bytes_of=lambda blk: rows(blk)[1] * cols(blk)[1] * bpe,
+            inout=True,
+        )
     return PipelineSpec(
         name="syrk",
         nsteps=part.nblocks,
@@ -475,6 +694,7 @@ def syrk_pipeline_spec(part: GemmPartition,
         ),
         writeback=WriteBack(mode="each", operand="C"),
         budget=part.budget,
+        traversal=traversal,
     )
 
 
@@ -690,11 +910,56 @@ def _hits(span: Tuple[int, int], lo: int, hi: int) -> bool:
     return span[0] < hi and lo < span[0] + span[1]
 
 
+def _stage_split(spec: FactorPipelineSpec, k: int):
+    """(prio, rest) trailing blocks of stage ``k`` under the lookahead
+    policy — the single source of truth for trailing emission order, shared
+    by the compiler's main loop and the residency pre-pass."""
+    k0, k1 = spec.panel_range(k)
+    if k1 >= spec.n:
+        return [], []
+    blocks = _stage_grid(k1, spec.n - k1, spec.bm, spec.bn)
+    if spec.kind != "lu":
+        # Cholesky is symmetric: nothing ever reads the strict upper
+        # triangle (panels and multiplier slices are at-or-below the
+        # diagonal, np.linalg.cholesky reads only the lower half, and
+        # ooc_cholesky tril's the result), so blocks entirely above it are
+        # dead work — skipping them halves the trailing flops and traffic.
+        # Diagonal-crossing blocks stay whole.
+        blocks = [blk for blk in blocks if blk[2][0] + blk[2][1] > blk[3][0]]
+    if max(0, spec.lookahead) == 0 or k == spec.npanels - 1:
+        return blocks, []
+    nk0, nk1 = spec.panel_range(k + 1)
+    # prio: the leading block column(s) — what the next panel factor reads.
+    # Whole columns only, so each column's once-per-column Ft transfer stays
+    # adjacent to all its consumers.  (LU's U row panel additionally needs
+    # the first block *row*, but its chain is fenced behind the swap replay
+    # — which waits on the whole stage — so prioritizing it buys nothing.)
+    prio = [blk for blk in blocks if _hits(blk[3], nk0, nk1)]
+    rest = [blk for blk in blocks if not _hits(blk[3], nk0, nk1)]
+    return prio, rest
+
+
+def _trailing_emission_order(spec: FactorPipelineSpec):
+    """(stage, block) pairs in the exact order the compiler emits trailing
+    blocks: each iteration drains the previous stage's deferred ``rest``
+    before issuing stage ``k``'s ``prio``.  Feeds the Fr residency cache its
+    full access sequence so the Belady oracle sees the true future."""
+    out, rest, rest_stage = [], [], -1
+    for k in range(spec.npanels):
+        out.extend((rest_stage, blk) for blk in rest)
+        prio, rest = _stage_split(spec, k)
+        rest_stage = k
+        out.extend((k, blk) for blk in prio)
+    assert not rest, "internal: trailing blocks left unemitted"
+    return out
+
+
 def compile_factor_pipeline(
     spec: FactorPipelineSpec,
     nstreams: int = 2,
     nbuf: int = 2,
     device: Optional[Device] = None,
+    evict: str = "lru",
 ) -> Schedule:
     """Compile a factorization spec into one event-correct Schedule.
 
@@ -718,6 +983,13 @@ def compile_factor_pipeline(
     the panel transfer + GETRF only; Cholesky's whole panel chain overlaps.
     With ``lookahead=0`` the next panel instead waits on every trailing
     write-back: the sequential per-panel loop, as one schedule.
+
+    The left-multiplier slices (``Fr``) live in a :class:`BlockCache` keyed
+    by (stage, block row): every block in block row ``i`` of stage ``k``
+    reads the *same* panel-row slice, so only the first emitted block of a
+    resident row pays its H2D — the rest hit.  ``evict`` selects the cache's
+    replacement policy; the pre-computed trailing emission order feeds the
+    Belady oracle.
     """
     n, bpe, lu = spec.n, spec.bytes_per_el, spec.kind == "lu"
     npanels, npbuf = spec.npanels, spec.npbuf
@@ -736,6 +1008,14 @@ def compile_factor_pipeline(
     stage_writes: List[Tuple[Tuple[int, int], Tuple[int, int], Event]] = []
     gstep = 0  # global trailing step counter (stream round robin)
 
+    # Fr residency: identity (stage, block row) — its slice depends only on
+    # the row extent, so same-row blocks across columns share one transfer
+    fr_cache = BlockCache(
+        "Fr", nbuf, evict,
+        [(k, blk[0]) for k, blk in _trailing_emission_order(spec)])
+    fr_pos = 0
+    fr_inc: Dict[Tuple[int, int], int] = {}
+
     def waits_for(key, *events: Iterable[Event]) -> Tuple[Event, ...]:
         out: Dict[str, Event] = {}
         for ev in release.pop(key, ()):
@@ -753,21 +1033,35 @@ def compile_factor_pipeline(
     def emit_block(k: int, pw: int, blk) -> None:
         """One trailing-update block of stage ``k``: stream the multiplier
         slices and the C block, dgemm, write back."""
-        nonlocal gstep
+        nonlocal gstep, fr_pos
         i, j, rows, cols = blk
         k0, k1 = spec.panel_range(k)
         s = gstep % nstreams
         h_k = math.ceil((n - k1) / spec.bm)
         idx = j * h_k + i
-        # left multiplier: rows of the factored panel (the A/Pr role)
-        lkey = ("Fr", idx % nbuf)
-        b.issue(
-            kind=OpKind.H2D, tag=f"S(fr{k}[{idx}])", stream=s,
-            waits=waits_for(lkey, overlapping(rows, (k0, pw)),
-                            (b.event(f"wPNL[{k}]"),)),
-            records=b.event(f"rFr{k}[{idx}]"),
-            buffers_written=(lkey,), bytes=rows[1] * pw * bpe,
-            payload=SliceRef("A", idx, rows=rows, cols=(k0, pw)))
+        # left multiplier: rows of the factored panel (the A/Pr role) —
+        # cached per (stage, block row), so only the row's first emitted
+        # block transfers while it stays resident
+        fr_id = (k, i)
+        lslot, fr_hit, fr_evict = fr_cache.access(fr_pos, fr_id,
+                                                  rows[1] * pw * bpe)
+        fr_pos += 1
+        lkey = ("Fr", lslot)
+        if not fr_hit:
+            inc = fr_inc.get(fr_id, 0)
+            fr_inc[fr_id] = inc + 1
+            suffix = "" if inc == 0 else f"@{inc}"
+            landing = b.event(f"rFr{k}[r{i}]{suffix}")
+            fr_cache.set_landing(fr_id, landing)
+            fr_waits: Dict[str, Event] = {e.name: e for e in fr_evict}
+            for e in overlapping(rows, (k0, pw)) + [b.event(f"wPNL[{k}]")]:
+                fr_waits[e.name] = e
+            b.issue(
+                kind=OpKind.H2D, tag=f"S(fr{k}[r{i}]){suffix}", stream=s,
+                waits=tuple(fr_waits.values()),
+                records=landing,
+                buffers_written=(lkey,), bytes=rows[1] * pw * bpe,
+                payload=SliceRef("A", i, rows=rows, cols=(k0, pw)))
         # right multiplier, once per column: transposed panel rows (SYRK) or
         # the U row panel slice (LU).  Keyed per (stage, column) — with the
         # Cholesky triangular skip a column's first *emitted* block need not
@@ -803,7 +1097,7 @@ def compile_factor_pipeline(
         b.issue(
             kind=OpKind.COMPUTE, tag=f"{'GEMM' if lu else 'SYRK'}{k}[{idx}]",
             stream=s,
-            waits=(b.event(f"rFr{k}[{idx}]"), b.event(f"rFt{k}[{j}]"),
+            waits=(fr_cache.landing_event(fr_id), b.event(f"rFt{k}[{j}]"),
                    b.event(f"rC{k}[{idx}]")),
             records=b.event(f"eT{k}[{idx}]"),
             buffers_read=(lkey, tkey), buffers_written=(ckey,),
@@ -816,7 +1110,7 @@ def compile_factor_pipeline(
             buffers_read=(ckey,), bytes=rows[1] * cols[1] * bpe,
             payload=SliceRef("A", idx, rows=rows, cols=cols))
         # ledger updates: buffer reuse + host-region write
-        release[lkey] = (b.event(f"eT{k}[{idx}]"),)
+        fr_cache.note_release(fr_id, s, b.event(f"eT{k}[{idx}]"))
         keep = () if fresh_ft else release.get(tkey, ())
         release[tkey] = tuple(keep) + (b.event(f"eT{k}[{idx}]"),)
         release[ckey] = (wc,)
@@ -928,35 +1222,16 @@ def compile_factor_pipeline(
         stage_writes = new_writes
         new_writes = []
         # ---- trailing update of stage k --------------------------------
-        if k1 >= n:
-            continue
-        blocks = _stage_grid(k1, n - k1, spec.bm, spec.bn)
-        if not lu:
-            # Cholesky is symmetric: nothing ever reads the strict upper
-            # triangle (panels and multiplier slices are at-or-below the
-            # diagonal, np.linalg.cholesky reads only the lower half, and
-            # ooc_cholesky tril's the result), so blocks entirely above it
-            # are dead work — skipping them halves the trailing flops and
-            # traffic.  Diagonal-crossing blocks stay whole.
-            blocks = [blk for blk in blocks
-                      if blk[2][0] + blk[2][1] > blk[3][0]]
-        if lookahead == 0 or k == npanels - 1:
-            prio, rest = blocks, []
-        else:
-            nk0, nk1 = spec.panel_range(k + 1)
-            # the leading block column(s): what the next panel factor reads.
-            # Whole columns only, so each column's once-per-column Ft
-            # transfer stays adjacent to all its consumers.  (LU's U row
-            # panel additionally needs the first block *row*, but its chain
-            # is fenced behind the swap replay — which waits on the whole
-            # stage — so prioritizing it would buy nothing.)
-            prio = [blk for blk in blocks if _hits(blk[3], nk0, nk1)]
-            rest = [blk for blk in blocks if not _hits(blk[3], nk0, nk1)]
+        prio, rest = _stage_split(spec, k)
         rest_stage = k
         for blk in prio:
             emit_block(k, pw, blk)
     # the last stage's deferred blocks (none: the final panel drains them)
     assert not rest, "internal: trailing blocks left unemitted"
+    assert fr_pos == len(fr_cache.next_use), \
+        "internal: emission diverged from the residency pre-pass"
+    b.sched.meta = {"evict": evict, "kind": spec.kind}
+    b.sched.reuse = {"Fr": fr_cache.stats()}
     return b.sched
 def build_gemm_schedule(
     part: GemmPartition,
@@ -964,10 +1239,14 @@ def build_gemm_schedule(
     nbuf: int = 2,
     write_back: bool = True,
     device: Optional[Device] = None,
+    traversal: str = "col",
+    evict: str = "lru",
 ) -> Schedule:
     """Emit the MMOOC schedule of libhclooc Fig. 2 for ``part``."""
-    return compile_pipeline(gemm_pipeline_spec(part, write_back=write_back),
-                            nstreams=nstreams, nbuf=nbuf, device=device)
+    spec = gemm_pipeline_spec(part, write_back=write_back,
+                              traversal=traversal, band=nbuf)
+    return compile_pipeline(spec, nstreams=nstreams, nbuf=nbuf,
+                            device=device, evict=evict)
 
 
 def build_attention_schedule(
@@ -989,10 +1268,14 @@ def build_syrk_schedule(
     nstreams: int = 2,
     nbuf: int = 2,
     device: Optional[Device] = None,
+    traversal: str = "col",
+    evict: str = "lru",
 ) -> Schedule:
     """Blocked SYRK schedule (Cholesky trailing update)."""
-    return compile_pipeline(syrk_pipeline_spec(part),
-                            nstreams=nstreams, nbuf=nbuf, device=device)
+    return compile_pipeline(syrk_pipeline_spec(part, traversal=traversal,
+                                               band=nbuf),
+                            nstreams=nstreams, nbuf=nbuf,
+                            device=device, evict=evict)
 
 
 def build_vendor_schedule(
@@ -1014,4 +1297,7 @@ def schedule_stats(sched: Schedule) -> dict:
         "d2h_bytes": sched.total_bytes(OpKind.D2H),
         "flops": sched.total_flops(),
         "n_events": sum(1 for o in sched.ops if o.records is not None),
+        "reuse_hits": sum(r["hits"] for r in sched.reuse.values()),
+        "h2d_saved_bytes": sum(r["bytes_saved"]
+                               for r in sched.reuse.values()),
     }

@@ -186,6 +186,12 @@ class ScheduleExecutor:
     Recording synchronizes each op's written buffers (JAX dispatch is async),
     so it serializes the pipeline: use it to *inspect* schedules, not to
     benchmark them.
+
+    ``last_h2d_bytes``/``last_d2h_bytes`` count the bytes of the transfer
+    ops the executor actually performed in the most recent :meth:`run` —
+    the ground truth the simulator's modeled byte counts are asserted
+    against (a cache-hit step has no H2D op, so skipped transfers are
+    counted by neither).
     """
 
     def __init__(self,
@@ -196,6 +202,8 @@ class ScheduleExecutor:
         self.async_writeback = async_writeback
         self.record_spans = record_spans
         self.last_spans: List[Tuple[str, int, float, float]] = []
+        self.last_h2d_bytes = 0
+        self.last_d2h_bytes = 0
 
     def _handler(self, ref: BlockRef) -> HandlerFn:
         fn = self.handlers.get(ref.kernel) or _OP_HANDLERS.get(ref.kernel)
@@ -234,12 +242,15 @@ class ScheduleExecutor:
         if trace:
             self.last_spans = []
             t_base = time.perf_counter()
+        self.last_h2d_bytes = 0
+        self.last_d2h_bytes = 0
 
         for op in sched.ops:
             ref = op.payload
             if trace:
                 t0 = time.perf_counter() - t_base
             if op.kind == OpKind.H2D:
+                self.last_h2d_bytes += op.bytes
                 key = op.buffers_written[0]
                 if key in pending:       # schedule's wC wait point: the
                     flush(key)           # previous occupant lands now
@@ -252,6 +263,7 @@ class ScheduleExecutor:
             elif op.kind == OpKind.COMPUTE:
                 self._handler(ref)(st, op, ref)
             elif op.kind == OpKind.D2H:
+                self.last_d2h_bytes += op.bytes
                 if isinstance(ref, BlockRef):  # finalize handler
                     for key in list(pending):  # finalizers read/patch host
                         flush(key)             # state: land in-flight blocks

@@ -109,10 +109,23 @@ class SimResult:
     flops: int
     h2d_bytes: int
     d2h_bytes: int
+    # H2D bytes actually moved, per operand class (from the H2D ops' parity
+    # buffer keys) — exact, not modeled: the sum equals ``h2d_bytes``
+    h2d_by_operand: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # the schedule's block-cache counters (hits/misses/bytes per class)
+    reuse: Dict[str, Dict[str, int]] = dataclasses.field(default_factory=dict)
 
     @property
     def effective_flops(self) -> float:
         return self.flops / self.makespan if self.makespan > 0 else 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        """Block-cache hit rate across all operand classes (0.0 when the
+        schedule carries no residency stats)."""
+        hits = sum(r["hits"] for r in self.reuse.values())
+        total = hits + sum(r["misses"] for r in self.reuse.values())
+        return hits / total if total else 0.0
 
     def utilization(self, pool: str) -> float:
         return self.busy.get(pool, 0.0) / self.makespan if self.makespan else 0.0
@@ -124,7 +137,18 @@ class SimResult:
         ``pid`` places the spans in a specific lane group when several
         devices' results are merged into one trace."""
         from repro.core.trace import chrome_trace
-        return chrome_trace(self.op_spans, process_name=process_name, pid=pid)
+        return chrome_trace(self.op_spans, process_name=process_name, pid=pid,
+                            reuse=self.reuse)
+
+
+def _h2d_by_operand(sched: Schedule) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for op in sched.ops:
+        if op.kind == OpKind.H2D and op.buffers_written:
+            key = op.buffers_written[0]
+            name = key[0] if isinstance(key, tuple) else str(key)
+            out[name] = out.get(name, 0) + op.bytes
+    return out
 
 
 def simulate(sched: Schedule, hw: HardwareModel) -> SimResult:
@@ -225,6 +249,8 @@ def simulate(sched: Schedule, hw: HardwareModel) -> SimResult:
         flops=sched.total_flops(),
         h2d_bytes=sched.total_bytes(OpKind.H2D),
         d2h_bytes=sched.total_bytes(OpKind.D2H),
+        h2d_by_operand=_h2d_by_operand(sched),
+        reuse={k: dict(v) for k, v in sched.reuse.items()},
     )
 
 
@@ -291,4 +317,6 @@ def simulate_reference(sched: Schedule, hw: HardwareModel) -> SimResult:
         flops=sched.total_flops(),
         h2d_bytes=sched.total_bytes(OpKind.H2D),
         d2h_bytes=sched.total_bytes(OpKind.D2H),
+        h2d_by_operand=_h2d_by_operand(sched),
+        reuse={k: dict(v) for k, v in sched.reuse.items()},
     )

@@ -157,6 +157,12 @@ class Schedule:
     device: Device
     streams: List[Stream]
     ops: List[Op] = dataclasses.field(default_factory=list)  # global issue order
+    # residency stats per operand class (hits/misses/bytes_moved/bytes_saved)
+    # filled by the pipeline compiler's block cache; empty for hand-built
+    # schedules
+    reuse: Dict[str, Dict[str, int]] = dataclasses.field(default_factory=dict)
+    # compile-time knobs worth reporting (traversal, eviction policy, ...)
+    meta: Dict[str, str] = dataclasses.field(default_factory=dict)
 
     def issue(self, op: Op) -> Op:
         self.ops.append(op)
@@ -287,7 +293,17 @@ def validate_schedule(sched: Schedule) -> None:
         op = ops[u]
         for b in op.buffers_read:
             w = last_writer.get(b)
-            if w is not None:
+            if w is None:
+                # device parity buffers (tuple keys) must be transferred
+                # into before anything consumes them; string-keyed carry
+                # state is legitimately read before the first write
+                # (attention initializes the carry in-handler at step 0)
+                if isinstance(b, tuple):
+                    raise ScheduleError(
+                        f"op {op.tag} reads buffer {b!r} before any "
+                        f"transfer wrote it (use-before-transfer)"
+                    )
+            else:
                 check(w, u, b)
             readers.setdefault(b, []).append(u)
         for b in op.buffers_written:

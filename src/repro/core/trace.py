@@ -23,9 +23,10 @@ lane-group per device and identical stream ids never collide.
 from __future__ import annotations
 
 import json
-from typing import Iterable, List, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 Span = Tuple[str, int, float, float]
+Reuse = Dict[str, Dict[str, int]]
 
 
 def _category(tag: str) -> str:
@@ -37,7 +38,7 @@ def _category(tag: str) -> str:
 
 
 def _group_events(spans: Iterable[Span], process_name: str,
-                  pid: int) -> List[dict]:
+                  pid: int, reuse: Optional[Reuse] = None) -> List[dict]:
     """Events for one span source under one trace process."""
     spans = list(spans)
     events = [{
@@ -59,15 +60,28 @@ def _group_events(spans: Iterable[Span], process_name: str,
             "pid": pid,
             "tid": stream,
         })
+    if reuse:
+        # every H2D on the timeline is a cache miss; hits are the transfers
+        # that are *not* there — surface them as an instant annotation
+        hits = sum(r["hits"] for r in reuse.values())
+        misses = sum(r["misses"] for r in reuse.values())
+        events.append({
+            "name": f"block-cache: {hits} hits / {misses} transfers",
+            "cat": "reuse", "ph": "I", "s": "p",
+            "ts": 0.0, "pid": pid, "tid": 0,
+            "args": {k: dict(v) for k, v in reuse.items()},
+        })
     return events
 
 
 def chrome_trace(spans: Iterable[Span],
                  process_name: str = "ooc-pipeline",
-                 pid: int = 0) -> dict:
+                 pid: int = 0, reuse: Optional[Reuse] = None) -> dict:
     """Spans -> a ``chrome://tracing`` JSON object (complete "X" events,
-    microsecond timestamps, one thread per stream)."""
-    return {"traceEvents": _group_events(spans, process_name, pid),
+    microsecond timestamps, one thread per stream).  ``reuse`` (a schedule's
+    block-cache counters) adds an instant event annotating how many H2D
+    transfers the residency cache elided."""
+    return {"traceEvents": _group_events(spans, process_name, pid, reuse),
             "displayTimeUnit": "ms"}
 
 
@@ -84,9 +98,11 @@ def chrome_trace_groups(
 
 
 def write_chrome_trace(path: str, spans: Iterable[Span],
-                       process_name: str = "ooc-pipeline") -> None:
+                       process_name: str = "ooc-pipeline",
+                       reuse: Optional[Reuse] = None) -> None:
     with open(path, "w") as f:
-        json.dump(chrome_trace(spans, process_name=process_name), f)
+        json.dump(chrome_trace(spans, process_name=process_name,
+                               reuse=reuse), f)
 
 
 def write_chrome_trace_groups(

@@ -81,10 +81,12 @@ def device_schedule(hplan: HybridPlan, dp: DevicePlan) -> Schedule:
     if hplan.kernel == "gemm":
         if not plan.write_back:
             raise ValueError("hybrid GEMM requires write-back sub-plans")
-        spec = gemm_pipeline_spec(plan.gemm_partition())
+        spec = gemm_pipeline_spec(plan.gemm_partition(),
+                                  traversal=plan.traversal, band=plan.nbuf)
     elif hplan.kernel == "syrk":
         spec = syrk_pipeline_spec(plan.gemm_partition(),
-                                  pt_source=_SYRK_FULL_PANEL)
+                                  pt_source=_SYRK_FULL_PANEL,
+                                  traversal=plan.traversal, band=plan.nbuf)
     elif hplan.kernel == "attention":
         _, kv_heads, head_dim, q_heads = plan.problem
         spec = attention_pipeline_spec(plan.attention_partition(),
@@ -94,9 +96,14 @@ def device_schedule(hplan: HybridPlan, dp: DevicePlan) -> Schedule:
             writeback=dataclasses.replace(spec.writeback,
                                           kernel="attn_partial",
                                           out="partial"))
+        return compile_pipeline(spec, nstreams=plan.nstreams, nbuf=plan.nbuf)
     else:
         raise ValueError(f"unknown hybrid kernel {hplan.kernel!r}")
-    return compile_pipeline(spec, nstreams=plan.nstreams, nbuf=plan.nbuf)
+    # gemm/syrk: replay the traversal + eviction policy the search ranked,
+    # so each device's executed pipeline elides the same H2D transfers the
+    # balancer's simulated makespans assumed
+    return compile_pipeline(spec, nstreams=plan.nstreams, nbuf=plan.nbuf,
+                            evict=plan.evict)
 
 
 def _run_concurrent(jobs) -> list:

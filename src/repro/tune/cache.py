@@ -1,8 +1,12 @@
 """Plan cache: search once per (problem, dtype, tier, hardware) tuple.
 
-Plans persist as one JSON document mapping cache keys to
-:meth:`~repro.tune.search.TunedPlan.to_json` payloads.  The key format
-(DESIGN.md §6) is::
+Plans persist as one JSON document ``{"schema": N, "plans": {key: plan}}``
+mapping cache keys to :meth:`~repro.tune.search.TunedPlan.to_json`
+payloads.  A store whose ``schema`` differs from :data:`SCHEMA_VERSION` is
+treated as empty: bumping the version invalidates every cached plan at
+once, which matters whenever the *search space* changes shape (v2 added
+traversal-order and eviction-policy search — a v1 plan would silently pin
+the old column-major-only schedule).  The key format (DESIGN.md §6) is::
 
     <kernel>:<problem dims 'x'-joined>:<dtype>:<tier>:<budget>:<fingerprint>
 
@@ -27,6 +31,11 @@ from typing import Dict, Optional, Sequence
 from repro.tune.search import TunedPlan
 
 _ENV_VAR = "REPRO_TUNE_CACHE"
+
+# bump whenever the planner's search space or TunedPlan semantics change in
+# a way that makes previously-cached plans stale (v2: traversal x eviction
+# joined the search space)
+SCHEMA_VERSION = 2
 
 
 def default_cache_path() -> str:
@@ -64,7 +73,14 @@ class PlanCache:
             try:
                 with open(self.path) as f:
                     data = json.load(f)
-                self._mem = data if isinstance(data, dict) else {}
+                if (isinstance(data, dict)
+                        and data.get("schema") == SCHEMA_VERSION
+                        and isinstance(data.get("plans"), dict)):
+                    self._mem = data["plans"]
+                else:
+                    # other schema versions (including the flat v1 layout)
+                    # predate the current search space: invalidate wholesale
+                    self._mem = {}
             except (OSError, ValueError):
                 self._mem = {}
         return self._mem
@@ -76,7 +92,8 @@ class PlanCache:
         fd, tmp = tempfile.mkstemp(dir=d or ".", suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:
-                json.dump(self._mem, f, indent=1, sort_keys=True)
+                json.dump({"schema": SCHEMA_VERSION, "plans": self._mem},
+                          f, indent=1, sort_keys=True)
             os.replace(tmp, self.path)
         except BaseException:
             try:

@@ -62,6 +62,10 @@ class TunedPlan:
     baseline_makespan: float
     model: str
     fingerprint: str
+    # block-grid traversal order and residency eviction policy the schedule
+    # is compiled with (defaults match the pre-reuse column-major plans)
+    traversal: str = "col"
+    evict: str = "lru"
 
     def param(self, name: str) -> int:
         for k, v in self.params:
@@ -120,12 +124,21 @@ def search_gemm(
     nstreams_options: Sequence[int] = (1, 2),
     nbuf_options: Sequence[int] = (1, 2, 3),
     write_back_options: Sequence[bool] = (True,),
+    traversal_options: Sequence[str] = ("col", "serpentine", "blocked",
+                                        "zmorton"),
+    evict_options: Sequence[str] = ("lru", "belady"),
     max_steps: int = 2048,
 ) -> TunedPlan:
     """Exhaustively rank the pruned GEMM/SYRK space under ``profile``.
 
     Element size derives from ``dtype`` (the plan embeds both; deriving
     keeps the searched bytes and the reconstructed partition consistent).
+    Traversal and eviction policy are searched jointly with the pipeline
+    shape: Belady never *misses* more than LRU on a static schedule, but
+    its eviction waits can stall the transfer stream behind far-future
+    consumers, so makespan — not bytes — arbitrates, and the winning plan
+    records both knobs so entry points replay the ranked schedule byte for
+    byte.
     """
     if kernel not in ("gemm", "syrk"):
         raise ValueError(f"search_gemm cannot tune kernel {kernel!r}")
@@ -135,12 +148,17 @@ def search_gemm(
         raise ValueError("syrk pipelines always write back; "
                          "write_back_options must be (True,)")
     bytes_per_el = np.dtype(dtype).itemsize
-    spec_of = (gemm_pipeline_spec if kernel == "gemm"
-               else lambda part, write_back=True: syrk_pipeline_spec(part))
+    if kernel == "gemm":
+        spec_of = gemm_pipeline_spec
+    else:
+        def spec_of(part, write_back=True, traversal="col", band=None):
+            return syrk_pipeline_spec(part, traversal=traversal, band=band)
     space = gemm_search_space(
         M, N, K, budget_bytes, bytes_per_el,
         nstreams_options=nstreams_options, nbuf_options=nbuf_options,
-        write_back_options=write_back_options, max_steps=max_steps)
+        write_back_options=write_back_options,
+        traversal_options=traversal_options, evict_options=evict_options,
+        max_steps=max_steps)
     if not space:
         raise ValueError(
             f"no feasible pipeline configuration for GEMM {(M, N, K)} "
@@ -149,8 +167,10 @@ def search_gemm(
     best = None
     best_key = None
     for idx, cand in enumerate(space):
-        sched = compile_pipeline(spec_of(cand.part, write_back=cand.write_back),
-                                 nstreams=cand.nstreams, nbuf=cand.nbuf)
+        sched = compile_pipeline(
+            spec_of(cand.part, write_back=cand.write_back,
+                    traversal=cand.traversal, band=cand.nbuf),
+            nstreams=cand.nstreams, nbuf=cand.nbuf, evict=cand.evict)
         res = simulate(sched, profile.model_for(cand.nstreams))
         key = _rank_key(res.makespan, cand.nstreams, cand.nbuf,
                         cand.part.bm, cand.part.bn, idx)
@@ -184,6 +204,8 @@ def search_gemm(
         baseline_makespan=baseline,
         model=profile.name,
         fingerprint=fingerprint,
+        traversal=cand.traversal,
+        evict=cand.evict,
     )
 
 
@@ -200,6 +222,7 @@ def search_factor(
     nstreams_options: Sequence[int] = (1, 2),
     nbuf_options: Sequence[int] = (1, 2, 3),
     lookahead_options: Sequence[int] = (0, 1, 2),
+    evict_options: Sequence[str] = ("lru", "belady"),
     max_steps: int = 4096,
 ) -> TunedPlan:
     """Rank whole-factorization pipelines under ``profile``.
@@ -212,7 +235,10 @@ def search_factor(
     multi-panel schedule through the production
     :func:`~repro.core.pipeline.compile_factor_pipeline` and is timed end
     to end by ``simulate()``, shrinking grids included.  The plan's params
-    carry the chosen ``panel``/``bm``/``bn``/``lookahead``.
+    carry the chosen ``panel``/``bm``/``bn``/``lookahead``; the
+    factored-row cache's eviction policy is searched alongside (as in
+    :func:`search_gemm`, makespan arbitrates between LRU's unstalled
+    transfers and Belady's fewer of them) and recorded on the plan.
     """
     if kind not in ("cholesky", "lu"):
         raise ValueError(f"search_factor cannot tune kernel {kind!r}")
@@ -238,29 +264,31 @@ def search_factor(
                             kind=kind, lookahead=la, nbuf=nb)
                     except ValueError:
                         continue
-                    sched = compile_factor_pipeline(spec, nstreams=ns,
-                                                    nbuf=nb)
-                    if len(sched.ops) > max_steps:
-                        continue
-                    res = simulate(sched, profile.model_for(ns))
-                    # sequential default: the per-panel loop every entry
-                    # point ran before lookahead existed
-                    if pw == panels[0] and ns == 2 and nb == 2 and la == 0:
-                        baseline = res.makespan
-                    if pw == panels[0] and la == 0 and (
-                            seq_best is None or res.makespan < seq_best):
-                        seq_best = res.makespan
-                    key = (res.makespan, ns, nb, la, -spec.bm, -spec.bn,
-                           idx)
-                    if best_key is None or key < best_key:
-                        best, best_key = (spec, ns, nb, res), key
-                    idx += 1
+                    for ev in evict_options:
+                        sched = compile_factor_pipeline(spec, nstreams=ns,
+                                                        nbuf=nb, evict=ev)
+                        if len(sched.ops) > max_steps:
+                            continue
+                        res = simulate(sched, profile.model_for(ns))
+                        # sequential default: the per-panel loop every
+                        # entry point ran before lookahead existed
+                        if (pw == panels[0] and ns == 2 and nb == 2
+                                and la == 0 and ev == "lru"):
+                            baseline = res.makespan
+                        if pw == panels[0] and la == 0 and ev == "lru" and (
+                                seq_best is None or res.makespan < seq_best):
+                            seq_best = res.makespan
+                        key = (res.makespan, ns, nb, la, -spec.bm,
+                               -spec.bn, idx)
+                        if best_key is None or key < best_key:
+                            best, best_key = (spec, ns, nb, ev, res), key
+                        idx += 1
     if best is None:
         raise ValueError(
             f"no feasible {kind} pipeline for n={n}, panel<={panel} "
             f"within {budget_bytes}B (max_steps={max_steps})")
 
-    spec, ns, nb, res = best
+    spec, ns, nb, ev, res = best
     if baseline is None:
         # the exact (ns=2, nb=2, la=0) default was outside the option sets
         # or infeasible: fall back to the best sequential candidate, then
@@ -284,6 +312,7 @@ def search_factor(
         baseline_makespan=baseline,
         model=profile.name,
         fingerprint=fingerprint,
+        evict=ev,
     )
 
 

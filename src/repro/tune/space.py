@@ -37,13 +37,24 @@ class GemmCandidate:
     ``nstreams=2, nbuf=2``): it is kept in the space so the search can
     never lose to it, even though the legacy working-set model undercounts
     the B ping-pong by one slice and so may sit slightly above what the
-    generalized model admits."""
+    generalized model admits.
+
+    ``traversal`` is the step order over the block grid (see
+    :data:`repro.core.partitioner.TRAVERSALS`): it changes which H2D
+    transfers the compiler's residency cache can elide, at identical
+    working set — so it joins the search space for free.  ``evict`` is the
+    cache's replacement policy: Belady elides at least as many transfers as
+    LRU, but its eviction waits can stall the transfer stream on
+    not-yet-run consumers, so *makespan* must arbitrate — both policies are
+    enumerated and ranked."""
 
     part: GemmPartition
     nstreams: int
     nbuf: int
     write_back: bool = True
     baseline: bool = False
+    traversal: str = "col"
+    evict: str = "lru"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +102,9 @@ def gemm_search_space(
     nstreams_options: Sequence[int] = (1, 2),
     nbuf_options: Sequence[int] = (1, 2, 3),
     write_back_options: Sequence[bool] = (True,),
+    traversal_options: Sequence[str] = ("col", "serpentine", "blocked",
+                                        "zmorton"),
+    evict_options: Sequence[str] = ("lru", "belady"),
     max_steps: int = 2048,
     align_m: int = SUBLANE,
     align_n: int = LANE,
@@ -98,8 +112,12 @@ def gemm_search_space(
     """Enumerate feasible GEMM pipeline configurations, deterministically.
 
     The default planner's choice (legacy 2-deep working set, ``nstreams=2,
-    nbuf=2``) is always included when it exists, so the search's best is
-    never worse than the hardcoded default under the same cost oracle.
+    nbuf=2``, column-major) is always included when it exists, so the
+    search's best is never worse than the hardcoded default under the same
+    cost oracle.  Traversals and eviction policies multiply the space
+    without changing feasibility (same blocks, different order /
+    different elided transfers), and "col"/"lru" enumerate first so exact
+    makespan ties resolve to the paper's order and the default policy.
     """
     if budget_bytes <= 0:
         raise ValueError("budget must be positive")
@@ -107,15 +125,17 @@ def gemm_search_space(
     out: List[GemmCandidate] = []
 
     def add(part: GemmPartition, ns: int, nb: int, wb: bool,
-            baseline: bool = False) -> None:
-        key = (part.bm, part.bn, ns, nb, wb)
+            baseline: bool = False, traversal: str = "col",
+            evict: str = "lru") -> None:
+        key = (part.bm, part.bn, ns, nb, wb, traversal, evict)
         # the baseline is exempt from max_steps: whatever tune=None would
         # run must stay rankable, or the tuner could fail (empty space) or
         # lose to the very default it exists to beat
         if key in seen or (part.nblocks > max_steps and not baseline):
             return
         seen.add(key)
-        out.append(GemmCandidate(part, ns, nb, wb, baseline))
+        out.append(GemmCandidate(part, ns, nb, wb, baseline, traversal,
+                                 evict))
 
     # The hardcoded default, as the baseline the tuned plan must beat.
     try:
@@ -138,7 +158,10 @@ def gemm_search_space(
                         part = _partition(M, N, K, bm, bn,
                                           bytes_per_el, budget_bytes)
                         if part.working_set_bytes(nb, ns) <= budget_bytes:
-                            add(part, ns, nb, wb)
+                            for trav in traversal_options:
+                                for ev in evict_options:
+                                    add(part, ns, nb, wb, traversal=trav,
+                                        evict=ev)
                             break
     return out
 

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.tune import (AutoTuner, PlanCache, TunedPlan, gpu_profile,
                         search_factor, search_gemm)
+from repro.tune.cache import SCHEMA_VERSION
 
 
 def test_search_gemm_repeat_runs_identical():
@@ -78,8 +79,10 @@ def test_tuner_plan_identical_after_cache_round_trip(tmp_path):
 def _any_valid_plan(path, key):
     with open(path) as f:
         data = json.load(f)           # parseable — never torn
-    assert key in data
-    plan = TunedPlan.from_json(data[key])
+    assert data["schema"] == SCHEMA_VERSION
+    plans = data["plans"]
+    assert key in plans
+    plan = TunedPlan.from_json(plans[key])
     assert plan.kernel == "gemm"
     return plan
 
@@ -139,5 +142,5 @@ def test_racing_distinct_keys_do_not_corrupt(tmp_path):
             f.result()
     with open(path) as f:
         data = json.load(f)
-    assert set(data) == {f"key{i}" for i in range(8)}
+    assert set(data["plans"]) == {f"key{i}" for i in range(8)}
     assert len(cache) == 8

@@ -107,7 +107,10 @@ def test_c5_baseline_agrees_with_simulator():
                     phi_profile().model_for(2)).makespan
     assert plan.baseline_makespan == pytest.approx(want, rel=1e-12)
     got = simulate(build_gemm_schedule(plan.gemm_partition(),
-                                       plan.nstreams, plan.nbuf),
+                                       plan.nstreams, plan.nbuf,
+                                       write_back=plan.write_back,
+                                       traversal=plan.traversal,
+                                       evict=plan.evict),
                    phi_profile().model_for(plan.nstreams)).makespan
     assert plan.makespan == pytest.approx(got, rel=1e-12)
 
