@@ -2,6 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV:
   bench_overhead    — claim C1  (<=10 % abstraction overhead; paper §VI)
+                      + the observability guard (disabled obs hooks <2 %)
   bench_transition  — claim C2  (0 % loss at the in/out-of-core boundary;
                                  Fig. 5 green line)
   bench_pipeline    — claims C3+C5 (vs CUBLAS-XT-style vendor schedule;
@@ -17,12 +18,36 @@ Prints ``name,us_per_call,derived`` CSV:
                       hit-rate vs the naive schedule (DESIGN.md §9); rows
                       land in benchmarks/bench_reuse.json so the perf
                       trajectory tracks traffic, not just makespan
+
+Each module additionally runs with the process metric registry enabled
+(DESIGN.md §10) and, when it recorded anything, leaves a
+``benchmarks/<module>.metrics.json`` sidecar next to the ``bench_*.json``
+score files — the exact byte/op accounting behind each number, uploaded as
+a CI artifact and renderable via ``scripts/run_report.py --input``.
+
+Caveat: timed sections therefore run with metrics ON, which is fine — the
+publish path is per-run and bench_overhead's ``obs_disabled_overhead`` row
+separately guards the disabled cost.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import traceback
+
+
+def _write_sidecar(obs, mod_name: str) -> None:
+    """Snapshot the registry into ``benchmarks/<module>.metrics.json``
+    (skipped when the module recorded nothing)."""
+    snap = obs.snapshot()
+    if not snap["metrics"] and not snap["drift"]["records"]:
+        return
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        f"{mod_name}.metrics.json")
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=1, sort_keys=True)
 
 
 def main() -> None:
@@ -30,20 +55,28 @@ def main() -> None:
                             bench_pipeline, bench_reuse, bench_roofline,
                             bench_simulate, bench_transition, bench_tune,
                             bench_validate)
+    from repro.obs import get_observability
 
+    obs = get_observability()
     print("name,us_per_call,derived")
     failures = 0
     for mod in (bench_overhead, bench_transition, bench_pipeline,
                 bench_loc, bench_roofline, bench_validate, bench_simulate,
                 bench_tune, bench_hybrid, bench_reuse):
+        mod_name = mod.__name__.rsplit(".", 1)[-1]
+        obs.reset()
+        obs.enable(metrics=True)
         try:
             for row in mod.run():
                 derived = str(row["derived"]).replace(",", ";")
                 print(f"{row['name']},{row['us_per_call']:.1f},{derived}")
+            _write_sidecar(obs, mod_name)
         except Exception as e:
             failures += 1
             print(f"{mod.__name__},0.0,ERROR {type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
+        finally:
+            obs.reset()
     if failures:
         raise SystemExit(f"{failures} benchmark module(s) failed")
 

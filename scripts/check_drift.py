@@ -1,0 +1,127 @@
+"""Performance-drift check: working-tree bench JSONs vs committed baselines.
+
+The CI benchmark smokes rewrite ``benchmarks/bench_*.json`` in place; the
+committed copies (produced by the same ``--smoke`` shapes) are the
+baselines.  For every tracked ``bench_*.json`` this script matches rows by
+``name`` and compares:
+
+  * ``us_per_call`` — warns when ``new / old`` exceeds ``--threshold``
+    (default 1.25x, DESIGN.md §10).  Timing on shared CI runners is noisy,
+    so this is a *trend* tripwire, not a gate: the step is warn-only and
+    exits 0 unless ``--strict``.
+  * ``bytes_moved`` (where present) — the engine-model traffic is
+    deterministic, so any difference is a real behavior change and always
+    counts as drift, at any ratio.
+
+Rows present on only one side (renamed/added benchmarks) are reported as
+informational, never as drift.
+
+Example:
+    python scripts/check_drift.py                 # warn-only (CI default)
+    python scripts/check_drift.py --strict        # exit 1 on drift
+    python scripts/check_drift.py --baseline-ref origin/main
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _committed(ref: str, relpath: str):
+    """Row list of ``relpath`` at ``ref``, or None if not tracked there."""
+    proc = subprocess.run(
+        ["git", "show", f"{ref}:{relpath}"],
+        cwd=REPO, capture_output=True, text=True)
+    if proc.returncode != 0:
+        return None
+    return json.loads(proc.stdout)
+
+
+def _by_name(rows):
+    return {r["name"]: r for r in rows if "name" in r}
+
+
+def check_file(relpath: str, ref: str, threshold: float):
+    """Compare one bench JSON; returns (drift_lines, info_lines)."""
+    with open(os.path.join(REPO, relpath)) as f:
+        new = _by_name(json.load(f))
+    old_rows = _committed(ref, relpath)
+    if old_rows is None:
+        return [], [f"{relpath}: no baseline at {ref} (new file) — skipped"]
+    old = _by_name(old_rows)
+
+    drift, info = [], []
+    for name in sorted(set(new) & set(old)):
+        n, o = new[name], old[name]
+        t_new, t_old = n.get("us_per_call", 0.0), o.get("us_per_call", 0.0)
+        if t_old > 0 and t_new / t_old > threshold:
+            drift.append(
+                f"{relpath}:{name}: {t_new/t_old:.2f}x slower "
+                f"({t_old:.1f}us -> {t_new:.1f}us, threshold "
+                f"{threshold:.2f}x)")
+        if "bytes_moved" in o and n.get("bytes_moved") != o["bytes_moved"]:
+            drift.append(
+                f"{relpath}:{name}: modeled bytes_moved changed "
+                f"{o['bytes_moved']} -> {n.get('bytes_moved')} "
+                f"(deterministic — real behavior change)")
+    for name in sorted(set(new) - set(old)):
+        info.append(f"{relpath}:{name}: new row (no baseline)")
+    for name in sorted(set(old) - set(new)):
+        info.append(f"{relpath}:{name}: baseline row missing from new run")
+    return drift, info
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--baseline-ref", default="HEAD",
+                    help="git ref holding the baseline JSONs")
+    ap.add_argument("--threshold", type=float, default=1.25,
+                    help="warn when new/old us_per_call exceeds this")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on drift (default: warn only)")
+    ap.add_argument("paths", nargs="*",
+                    help="bench JSONs to check (default: "
+                         "benchmarks/bench_*.json)")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or sorted(
+        os.path.relpath(p, REPO)
+        for p in glob.glob(os.path.join(REPO, "benchmarks", "bench_*.json"))
+        if not p.endswith(".metrics.json"))  # sidecars aren't score files
+    if not paths:
+        print("check_drift: no bench JSONs found — nothing to check")
+        return 0
+
+    all_drift, all_info = [], []
+    for rel in paths:
+        drift, info = check_file(rel, args.baseline_ref, args.threshold)
+        all_drift += drift
+        all_info += info
+
+    for line in all_info:
+        print(f"  note: {line}")
+    if all_drift:
+        for line in all_drift:
+            print(f"DRIFT: {line}", file=sys.stderr)
+        print(f"check_drift: {len(all_drift)} drift warning(s) vs "
+              f"{args.baseline_ref}"
+              + ("" if args.strict else " (warn-only; pass --strict to "
+                                       "fail)"),
+              file=sys.stderr)
+        return 1 if args.strict else 0
+    print(f"check_drift: {len(paths)} file(s) within {args.threshold:.2f}x "
+          f"of {args.baseline_ref} baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

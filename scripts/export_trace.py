@@ -32,14 +32,15 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 
 import numpy as np
 
-from repro.core import (EVICT_POLICIES, TRAVERSALS, HostOocRuntime,
-                        ScheduleExecutor, build_gemm_schedule,
+from repro.core import (EVICT_POLICIES, TRAVERSALS, HostOocRuntime, OpKind,
+                        ScheduleExecutor, build_gemm_schedule, chrome_trace,
                         compile_factor_pipeline, factor_pipeline_spec,
                         gpu_like, phi_like, plan_gemm_partition, simulate,
-                        tpu_v5e_ici, tpu_v5e_vmem, write_chrome_trace)
+                        tpu_v5e_ici, tpu_v5e_vmem)
 
 HW = {
     "gpu": lambda ns: gpu_like(),
@@ -48,9 +49,58 @@ HW = {
     "tpu_ici": lambda ns: tpu_v5e_ici(),
 }
 
+# informational output; rebound to stderr when the trace itself goes to
+# stdout (--out -) so the JSON stays parseable
+log = print
+
+
+def _summarize(doc: dict) -> str:
+    """Per-pid digest of a Chrome-trace doc: lane name, span count, busy
+    milliseconds per category — plus the modeled byte totals when the
+    exporting mode attached them (``otherData``)."""
+    lanes: dict = {}
+    for e in doc.get("traceEvents", ()):
+        pid = e.get("pid", 0)
+        lane = lanes.setdefault(pid, {"name": f"pid {pid}", "spans": 0,
+                                      "busy_ms": {}})
+        if e.get("ph") == "M" and e.get("name") == "process_name":
+            lane["name"] = e["args"]["name"]
+        elif e.get("ph") == "X":
+            lane["spans"] += 1
+            cat = e.get("cat", "span")
+            lane["busy_ms"][cat] = (lane["busy_ms"].get(cat, 0.0)
+                                    + e.get("dur", 0.0) / 1e3)
+    lines = []
+    for pid in sorted(lanes):
+        lane = lanes[pid]
+        cats = " ".join(f"{c}={ms:.2f}ms"
+                        for c, ms in sorted(lane["busy_ms"].items()))
+        lines.append(f"  pid {pid} [{lane['name']}]: {lane['spans']} spans"
+                     + (f"  {cats}" if cats else ""))
+    for k, v in sorted(doc.get("otherData", {}).items()):
+        lines.append(f"  {k}: {v}")
+    return "\n".join(lines)
+
+
+def _emit(doc: dict, args) -> None:
+    """Write the trace doc (``--out -`` = stdout) and, with ``--summary``,
+    print the per-pid digest."""
+    if args.summary:
+        log("summary:")
+        log(_summarize(doc))
+    if args.out == "-":
+        json.dump(doc, sys.stdout)
+        sys.stdout.write("\n")
+    else:
+        with open(args.out, "w") as f:
+            json.dump(doc, f)
+        log(f"wrote {args.out} — load at chrome://tracing or "
+            f"ui.perfetto.dev")
+
 
 def _hybrid_mode(args) -> None:
-    from repro.hybrid import DeviceSpec, plan_hybrid_gemm, simulate_hybrid
+    from repro.hybrid import (DeviceSpec, device_schedule, plan_hybrid_gemm,
+                              simulate_hybrid)
     from repro.tune import gpu_profile, phi_profile
 
     budget = int(args.budget_mb * 2**20)
@@ -60,14 +110,19 @@ def _hybrid_mode(args) -> None:
                              nbuf_options=(1, 2), max_steps=512)
     sim = simulate_hybrid(hplan)
     for dp, span in zip(hplan.device_plans, sim.device_makespans):
-        print(f"  {dp.device.name}: rows [{dp.start}, "
-              f"{dp.start + dp.length}) s{dp.plan.nstreams}b{dp.plan.nbuf} "
-              f"-> {span*1e3:.2f} ms")
-    with open(args.out, "w") as f:
-        json.dump(sim.to_chrome_trace(), f)
-    print(f"hybrid gemm {args.M}x{args.N}x{args.K}: aggregate makespan "
-          f"{sim.makespan*1e3:.2f} ms across {len(hplan.device_plans)} "
-          f"devices (one lane-group each)")
+        log(f"  {dp.device.name}: rows [{dp.start}, "
+            f"{dp.start + dp.length}) s{dp.plan.nstreams}b{dp.plan.nbuf} "
+            f"-> {span*1e3:.2f} ms")
+    doc = sim.to_chrome_trace()
+    scheds = [device_schedule(hplan, dp) for dp in hplan.device_plans]
+    doc["otherData"] = {
+        "h2d_bytes": sum(s.total_bytes(OpKind.H2D) for s in scheds),
+        "d2h_bytes": sum(s.total_bytes(OpKind.D2H) for s in scheds),
+    }
+    log(f"hybrid gemm {args.M}x{args.N}x{args.K}: aggregate makespan "
+        f"{sim.makespan*1e3:.2f} ms across {len(hplan.device_plans)} "
+        f"devices (one lane-group each)")
+    _emit(doc, args)
 
 
 def _factor_mode(args) -> None:
@@ -81,12 +136,14 @@ def _factor_mode(args) -> None:
     name = (f"{args.kind} n={args.n} panel={spec.panel} "
             f"la{spec.lookahead} s{args.nstreams}b{args.nbuf} {args.evict}")
     reuse = sched.reuse.get("Fr", {})
-    print(f"{name}: {len(sched.ops)} ops, simulated makespan "
-          f"{res.makespan*1e3:.2f} ms on {args.hw}; factored-row cache "
-          f"{reuse.get('hits', 0)} hits / {reuse.get('misses', 0)} "
-          f"transfers")
-    write_chrome_trace(args.out, res.op_spans, process_name=name,
-                       reuse=sched.reuse)
+    log(f"{name}: {len(sched.ops)} ops, simulated makespan "
+        f"{res.makespan*1e3:.2f} ms on {args.hw}; factored-row cache "
+        f"{reuse.get('hits', 0)} hits / {reuse.get('misses', 0)} "
+        f"transfers")
+    doc = chrome_trace(res.op_spans, process_name=name, reuse=sched.reuse)
+    doc["otherData"] = {"h2d_bytes": sched.total_bytes(OpKind.H2D),
+                        "d2h_bytes": sched.total_bytes(OpKind.D2H)}
+    _emit(doc, args)
 
 
 def main() -> None:
@@ -113,18 +170,23 @@ def main() -> None:
                     help="lookahead depth for --mode factor")
     ap.add_argument("--hw", choices=sorted(HW), default="gpu",
                     help="hardware model for --mode sim")
-    ap.add_argument("-o", "--out", default="trace.json")
+    ap.add_argument("-o", "--out", default="trace.json",
+                    help="output path; '-' writes the JSON to stdout "
+                         "(informational output moves to stderr)")
+    ap.add_argument("--summary", action="store_true",
+                    help="print a per-pid digest (lane, span count, busy "
+                         "ms per category, modeled byte totals)")
     args = ap.parse_args()
+
+    global log
+    if args.out == "-":
+        log = lambda *a, **kw: print(*a, file=sys.stderr, **kw)  # noqa: E731
 
     if args.mode == "hybrid":
         _hybrid_mode(args)
-        print(f"wrote {args.out} — load at chrome://tracing or "
-              f"ui.perfetto.dev")
         return
     if args.mode == "factor":
         _factor_mode(args)
-        print(f"wrote {args.out} — load at chrome://tracing or "
-              f"ui.perfetto.dev")
         return
 
     budget = int(args.budget_mb * 2**20)
@@ -139,8 +201,8 @@ def main() -> None:
     if args.mode == "sim":
         res = simulate(sched, HW[args.hw](args.nstreams))
         spans = res.op_spans
-        print(f"{name}: {len(sched.ops)} ops, "
-              f"simulated makespan {res.makespan*1e3:.2f} ms on {args.hw}")
+        log(f"{name}: {len(sched.ops)} ops, "
+            f"simulated makespan {res.makespan*1e3:.2f} ms on {args.hw}")
     else:
         rng = np.random.default_rng(0)
         A = rng.standard_normal((args.M, args.K)).astype(np.float32)
@@ -151,11 +213,12 @@ def main() -> None:
                                          schedule=sched)
         spans = ex.last_spans
         total = max(e for _, _, _, e in spans)
-        print(f"{name}: {len(spans)} ops executed in {total*1e3:.1f} ms wall")
+        log(f"{name}: {len(spans)} ops executed in {total*1e3:.1f} ms wall")
 
-    write_chrome_trace(args.out, spans, process_name=name,
-                       reuse=sched.reuse)
-    print(f"wrote {args.out} — load at chrome://tracing or ui.perfetto.dev")
+    doc = chrome_trace(spans, process_name=name, reuse=sched.reuse)
+    doc["otherData"] = {"h2d_bytes": sched.total_bytes(OpKind.H2D),
+                        "d2h_bytes": sched.total_bytes(OpKind.D2H)}
+    _emit(doc, args)
 
 
 if __name__ == "__main__":

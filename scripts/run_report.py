@@ -1,0 +1,193 @@
+"""One-command observability report for an OOC run (DESIGN.md §10).
+
+Two modes:
+
+  * **demo** (default) — run the acceptance scenario end to end with the
+    process :class:`repro.obs.Observability` fully enabled: a seeded
+    ``ooc_gemm(tune="auto", devices=[gpu, phi])`` co-execution plus a tuned
+    single-device GEMM, under canned calibrated profiles (no hardware
+    measurement, so the run is deterministic and CI-safe).  Emits:
+
+      - a single Chrome trace (``--trace-out``) — tuner search, plan-cache
+        lookups and the merge on pid 0, one executor lane-group per device;
+      - the metrics + drift snapshot (``--json-out``);
+      - a Markdown (default) or JSON report on stdout.
+
+  * ``--input snapshot.json`` — render an existing snapshot (an
+    ``obs.snapshot()`` document, e.g. a benchmark metrics sidecar) as the
+    same report, without running anything.
+
+Example:
+    PYTHONPATH=src python scripts/run_report.py --m 384 --trace-out t.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+
+# ---------------------------------------------------------------------------
+# Rendering
+# ---------------------------------------------------------------------------
+def _fmt(v: float) -> str:
+    if float(v).is_integer() and abs(v) < 2**63:
+        return str(int(v))
+    return f"{float(v):.6g}"
+
+
+def render_markdown(snap: dict, trace_path: str = None) -> str:
+    """Snapshot document -> Markdown report (metrics, drift, trace)."""
+    lines = ["# OOC run report", ""]
+
+    metrics = snap.get("metrics", [])
+    lines += ["## Metrics", ""]
+    if metrics:
+        lines += ["| metric | type | labels | value |",
+                  "|---|---|---|---|"]
+        for fam in metrics:
+            for s in fam.get("samples", ()):
+                labels = " ".join(
+                    f"{k}={v}" for k, v in sorted(s["labels"].items()))
+                if fam.get("type") == "histogram":
+                    value = (f"count={_fmt(s['count'])} "
+                             f"sum={_fmt(s['sum'])}s")
+                else:
+                    value = _fmt(s["value"])
+                lines.append(f"| `{fam['name']}` | {fam['type']} "
+                             f"| {labels} | {value} |")
+    else:
+        lines.append("_no metrics recorded_")
+
+    drift = snap.get("drift", {})
+    rolling = drift.get("rolling", {})
+    lines += ["", "## Drift (measured / predicted)", ""]
+    if rolling:
+        # last byte ratio per key comes from the raw records
+        byte_ratio = {}
+        for r in drift.get("records", ()):
+            k = "|".join((r["kernel"], r["tier"], r["fingerprint"]))
+            byte_ratio[k] = r.get("byte_ratio", 1.0)
+        lines += ["| kernel\\|tier\\|fingerprint | n | first | last "
+                  "| rolling mean | byte ratio |",
+                  "|---|---|---|---|---|---|"]
+        for key, row in sorted(rolling.items()):
+            lines.append(
+                f"| `{key}` | {row['n']} "
+                f"| {row['first_time_ratio']:.3g} "
+                f"| {row['last_time_ratio']:.3g} "
+                f"| {row['mean_time_ratio']:.3g} "
+                f"| {_fmt(byte_ratio.get(key, 1.0))} |")
+        lines += ["",
+                  "Byte ratios must be exactly 1 (executed transfers == "
+                  "modeled transfers).  Time ratios are a *trend* signal: "
+                  "a stable ratio means the calibrated profile still ranks "
+                  "plans faithfully; a drifting one means recalibrate."]
+    else:
+        lines.append("_no drift records_")
+
+    trace = snap.get("trace")
+    lines += ["", "## Trace", ""]
+    if trace:
+        lines.append(f"- control spans: {trace.get('control_spans', 0)}")
+        for name, g in sorted(trace.get("groups", {}).items()):
+            lines.append(f"- lane `{name}`: {g['spans']} spans, "
+                         f"{g['span_seconds']*1e3:.2f} ms busy")
+    else:
+        lines.append("_no trace recorded_")
+    if trace_path:
+        lines.append(f"- written to `{trace_path}` "
+                     f"(open at chrome://tracing or ui.perfetto.dev)")
+    return "\n".join(lines) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# Demo run
+# ---------------------------------------------------------------------------
+def demo_run(m: int, seed: int, cache_path: str):
+    """The acceptance scenario, deterministic: one tuned single-device GEMM
+    plus one hybrid co-executed GEMM under canned gpu/phi profiles."""
+    import numpy as np
+
+    from repro.core.oocgemm import ooc_gemm
+    from repro.hybrid import DeviceSpec
+    from repro.obs import get_observability
+    from repro.tune import AutoTuner, PlanCache, gpu_profile, phi_profile
+
+    obs = get_observability()
+    obs.reset()
+    obs.enable(metrics=True, trace=True, trace_name="run-report")
+
+    rng = np.random.default_rng(seed)
+    M = N = K = m
+    A = rng.standard_normal((M, K), dtype=np.float32)
+    B = rng.standard_normal((K, N), dtype=np.float32)
+    budget = (A.nbytes + B.nbytes + M * N * 4) // 3
+
+    tuner = AutoTuner(profile=gpu_profile(), fingerprint="report",
+                      cache=PlanCache(cache_path), max_steps=512)
+    out1 = ooc_gemm(A, B, budget_bytes=budget, tune="auto", tuner=tuner)
+
+    devices = [DeviceSpec("gpu0", gpu_profile(), budget),
+               DeviceSpec("phi0", phi_profile(), budget)]
+    out2 = ooc_gemm(A, B, budget_bytes=budget, tune="auto", devices=devices,
+                    tolerance=0.1)
+
+    ref = A @ B
+    err = max(float(np.abs(out1 - ref).max()),
+              float(np.abs(out2 - ref).max()))
+    return obs, err
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--input", default=None,
+                    help="render an existing snapshot JSON instead of "
+                         "running the demo")
+    ap.add_argument("--m", type=int, default=256,
+                    help="demo GEMM order (M=N=K)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--format", choices=("markdown", "json"),
+                    default="markdown", help="stdout report format")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the demo's Chrome trace here")
+    ap.add_argument("--json-out", default=None,
+                    help="write the snapshot document here")
+    args = ap.parse_args(argv)
+
+    trace_path = args.trace_out
+    if args.input:
+        with open(args.input) as f:
+            snap = json.load(f)
+        if "metrics" not in snap and "drift" not in snap:
+            raise SystemExit(f"{args.input}: not a snapshot document "
+                             f"(no 'metrics'/'drift' keys)")
+    else:
+        with tempfile.TemporaryDirectory() as tmp:
+            obs, err = demo_run(args.m, args.seed,
+                                os.path.join(tmp, "plans.json"))
+        snap = obs.snapshot()
+        snap["demo"] = {"m": args.m, "seed": args.seed, "max_abs_err": err}
+        if trace_path:
+            obs.tracer.write(trace_path)
+        obs.reset()
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(snap, f, indent=1, sort_keys=True)
+
+    if args.format == "json":
+        json.dump(snap, sys.stdout, indent=1, sort_keys=True)
+        sys.stdout.write("\n")
+    else:
+        sys.stdout.write(render_markdown(snap, trace_path=trace_path))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -130,6 +130,29 @@ def hclOocFactor(A, kind: str = "cholesky", **kw):
                      f"'cholesky' or 'lu'")
 
 
+def hclObservability(enable: bool = False, trace: bool = False, **kw):
+    """Facade over the process :class:`repro.obs.Observability` bundle
+    (DESIGN.md §10): metrics registry, hierarchical tracer and drift
+    monitor in one switch.
+
+        obs = hclObservability(enable=True, trace=True)
+        C = ooc_gemm(A, B, budget_bytes=..., tune="auto", devices=[...])
+        obs.tracer.write("trace.json")           # one coherent timeline
+        print(obs.metrics.to_prometheus_text())  # exact byte accounting
+        print(obs.drift.snapshot()["rolling"])   # predicted vs measured
+
+    With no arguments this just returns the singleton (everything starts
+    disabled); ``enable=True`` turns on metrics, ``trace=True`` also starts
+    a tracer.  Extra keywords forward to
+    :meth:`~repro.obs.Observability.enable`."""
+    from repro.obs import get_observability
+
+    obs = get_observability()
+    if enable or trace:
+        obs.enable(metrics=True, trace=trace, **kw)
+    return obs
+
+
 def hclAutoTuner(device: Optional[Device] = None, **kw):
     """Facade over :class:`repro.tune.AutoTuner` (DESIGN.md §6): calibrate
     the device once, then dispense cached ``TunedPlan``s — partition

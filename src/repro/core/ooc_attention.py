@@ -26,7 +26,8 @@ from repro.core.runtime import (
     ScheduleExecutor,
     register_op_handler,
 )
-from repro.core.streams import BlockRef, Op, validate_schedule
+from repro.core.streams import BlockRef, Op, OpKind, validate_schedule
+from repro.obs import get_observability
 
 
 @jax.jit
@@ -127,6 +128,7 @@ def ooc_attention(
                                       validate=validate)
         return jnp.asarray(out).astype(q.dtype)
 
+    plan = None
     if tune == "auto":
         if tuner is None:
             from repro.tune import get_default_tuner
@@ -149,10 +151,21 @@ def ooc_attention(
     # f32 carry lands in an f32 host buffer; the one cast to q.dtype happens
     # at the end (a narrower KV dtype must not quantize the result).
     out = np.zeros((H, d), dtype=np.float32)
-    ScheduleExecutor().run(
+    obs = get_observability()
+    ex = ScheduleExecutor(record_spans=obs.tracer is not None)
+    ex.run(
         sched,
         operands={"K": k_cache, "V": v_cache},
         outputs={"out": out},
         ctx={"q": q},
     )
+    if plan is not None:
+        obs.record_drift(
+            plan.kernel, plan.tier, plan.fingerprint,
+            predicted_makespan=plan.makespan,
+            measured_seconds=ex.last_wall_seconds,
+            predicted_h2d_bytes=sched.total_bytes(OpKind.H2D),
+            measured_h2d_bytes=ex.last_h2d_bytes,
+            predicted_d2h_bytes=sched.total_bytes(OpKind.D2H),
+            measured_d2h_bytes=ex.last_d2h_bytes)
     return jnp.asarray(out).astype(q.dtype)

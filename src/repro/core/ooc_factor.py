@@ -39,7 +39,8 @@ from repro.core.oocgemm import ooc_gemm, ooc_syrk
 from repro.core.pipeline import FactorPipelineSpec, factor_pipeline_spec
 from repro.core.runtime import (ScheduleExecutor, apply_panel_pivots,
                                 getrf_panel)
-from repro.core.streams import validate_schedule
+from repro.core.streams import OpKind, validate_schedule
+from repro.obs import get_observability
 
 
 def _plan_factor_spec(kind: str, n: int, panel: int, budget_bytes: int,
@@ -65,9 +66,10 @@ def _plan_factor_spec(kind: str, n: int, panel: int, budget_bytes: int,
 
 def _tuned_factor_spec(tuner, kind: str, n: int, panel: int,
                        budget_bytes: int, bytes_per_el: int,
-                       dtype) -> Tuple[FactorPipelineSpec, int, int, str]:
-    """(spec, nstreams, nbuf, evict) from the autotuner's factor plan — one
-    cached search covers every shrinking per-panel trailing shape."""
+                       dtype):
+    """(spec, nstreams, nbuf, evict, plan) from the autotuner's factor plan
+    — one cached search covers every shrinking per-panel trailing shape;
+    the plan rides along so the caller can record prediction drift."""
     if tuner is None:
         from repro.tune import get_default_tuner
         tuner = get_default_tuner()
@@ -77,21 +79,49 @@ def _tuned_factor_spec(tuner, kind: str, n: int, panel: int,
         n, plan.param("panel"), budget_bytes, bytes_per_el, kind=kind,
         lookahead=plan.param("lookahead"), nbuf=plan.nbuf,
         bm=plan.param("bm"), bn=plan.param("bn"))
-    return spec, plan.nstreams, plan.nbuf, plan.evict
+    return spec, plan.nstreams, plan.nbuf, plan.evict, plan
 
 
 def _run_factor(A: np.ndarray, spec: FactorPipelineSpec, nstreams: int,
-                nbuf: int, validate: bool, evict: str = "lru"):
+                nbuf: int, validate: bool, evict: str = "lru", plan=None):
     """Compile + execute the factor schedule over a copy of ``A``; returns
-    (factored matrix, executor state) — LU's permutation rides in scratch."""
+    (factored matrix, executor state) — LU's permutation rides in scratch.
+
+    When a trace is active the executor records its pipeline as the
+    ``factor:<kind>`` lane group; a tuned ``plan`` additionally yields a
+    drift record (whole-factorization predicted vs measured) and the
+    ``repro_factor_*`` gauges expose the searched lookahead/panel shape.
+    """
+    obs = get_observability()
     sched = plib.compile_factor_pipeline(spec, nstreams=nstreams, nbuf=nbuf,
                                          evict=evict)
     if validate:
         validate_schedule(sched)
     out = np.array(A, copy=True)
-    state = ScheduleExecutor().run(
+    ex = ScheduleExecutor(record_spans=obs.tracer is not None,
+                          trace_group=f"factor:{spec.kind}")
+    state = ex.run(
         sched, operands={}, outputs={"A": out},
         ctx={"alpha": -1.0, "beta": 1.0, "panel": spec.panel, "n": spec.n})
+    if obs.metrics.enabled:
+        kernel = f"{spec.kind}-factor"
+        obs.metrics.gauge(
+            "repro_factor_lookahead_depth",
+            "panels factored ahead of the streaming trailing update").set(
+                spec.lookahead, kernel=kernel)
+        obs.metrics.gauge(
+            "repro_factor_panel_width",
+            "resident panel width of the last factorization").set(
+                spec.panel, kernel=kernel)
+    if plan is not None:
+        obs.record_drift(
+            plan.kernel, plan.tier, plan.fingerprint,
+            predicted_makespan=plan.makespan,
+            measured_seconds=ex.last_wall_seconds,
+            predicted_h2d_bytes=sched.total_bytes(OpKind.H2D),
+            measured_h2d_bytes=ex.last_h2d_bytes,
+            predicted_d2h_bytes=sched.total_bytes(OpKind.D2H),
+            measured_d2h_bytes=ex.last_d2h_bytes)
     return out, state
 
 
@@ -137,13 +167,15 @@ def ooc_cholesky(A, panel: int = 256, *, budget_bytes: int,
         return _loop_cholesky(A, panel, budget_bytes, backend, tune, tuner,
                               devices, tolerance)
     bpe = np.dtype(A.dtype).itemsize
+    plan = None
     if tune == "auto":
-        spec, nstreams, nbuf, evict = _tuned_factor_spec(
+        spec, nstreams, nbuf, evict, plan = _tuned_factor_spec(
             tuner, "cholesky", n, panel, budget_bytes, bpe, A.dtype)
     else:
         spec = _plan_factor_spec("cholesky", n, panel, budget_bytes, bpe,
                                  lookahead, nbuf)
-    out, _ = _run_factor(A, spec, nstreams, nbuf, validate, evict=evict)
+    out, _ = _run_factor(A, spec, nstreams, nbuf, validate, evict=evict,
+                         plan=plan)
     return np.tril(out)
 
 
@@ -179,13 +211,15 @@ def ooc_lu(A, panel: int = 256, *, budget_bytes: int,
         return _loop_lu(A, panel, budget_bytes, backend, tune, tuner,
                         devices, tolerance)
     bpe = np.dtype(A.dtype).itemsize
+    plan = None
     if tune == "auto":
-        spec, nstreams, nbuf, evict = _tuned_factor_spec(
+        spec, nstreams, nbuf, evict, plan = _tuned_factor_spec(
             tuner, "lu", n, panel, budget_bytes, bpe, A.dtype)
     else:
         spec = _plan_factor_spec("lu", n, panel, budget_bytes, bpe,
                                  lookahead, nbuf)
-    out, state = _run_factor(A, spec, nstreams, nbuf, validate, evict=evict)
+    out, state = _run_factor(A, spec, nstreams, nbuf, validate, evict=evict,
+                             plan=plan)
     return out, state.scratch.get("perm", np.arange(n))
 
 

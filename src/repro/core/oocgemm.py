@@ -26,7 +26,8 @@ from repro.core.runtime import (
     VmemOocRuntime,
     _block_dgemm,
 )
-from repro.core.streams import Device, validate_schedule
+from repro.core.streams import Device, OpKind, validate_schedule
+from repro.obs import get_observability
 
 
 def is_in_core(M: int, N: int, K: int, budget_bytes: int,
@@ -35,12 +36,12 @@ def is_in_core(M: int, N: int, K: int, budget_bytes: int,
     return (M * K + K * N + M * N) * bytes_per_el <= budget_bytes
 
 
-def _tuned_gemm_config(
-        tuner, kernel: str, M: int, N: int, K: int, budget_bytes: int,
-        dtype) -> Tuple[GemmPartition, int, int, str, str]:
-    """Resolve (partition, nstreams, nbuf, traversal, evict) from the
+def _tuned_gemm_plan(tuner, kernel: str, M: int, N: int, K: int,
+                     budget_bytes: int, dtype):
+    """Resolve the full :class:`~repro.tune.search.TunedPlan` from the
     (default) autotuner's plan cache — searched once per (shape, dtype,
-    tier, hardware)."""
+    tier, hardware).  Returning the plan (not just its pipeline knobs)
+    keeps the predicted makespan available for drift recording."""
     if tuner is None:
         from repro.tune import get_default_tuner
         tuner = get_default_tuner()
@@ -52,8 +53,23 @@ def _tuned_gemm_config(
         raise ValueError(
             f"tuned plan for {kernel} {(M, N, K)} was searched with "
             f"write_back=False; ooc_{kernel} requires write-back plans")
-    return (plan.gemm_partition(), plan.nstreams, plan.nbuf,
-            plan.traversal, plan.evict)
+    return plan
+
+
+def _record_host_drift(plan, rt, sched) -> None:
+    """After a tuned host-backend run: log measured wall/bytes against the
+    plan's simulated makespan and the schedule's modeled byte totals."""
+    ex = getattr(rt, "executor", None)
+    if plan is None or ex is None:
+        return
+    get_observability().record_drift(
+        plan.kernel, plan.tier, plan.fingerprint,
+        predicted_makespan=plan.makespan,
+        measured_seconds=ex.last_wall_seconds,
+        predicted_h2d_bytes=sched.total_bytes(OpKind.H2D),
+        measured_h2d_bytes=ex.last_h2d_bytes,
+        predicted_d2h_bytes=sched.total_bytes(OpKind.D2H),
+        measured_d2h_bytes=ex.last_d2h_bytes)
 
 
 def _hybrid_kwargs(tolerance: Optional[float]) -> dict:
@@ -142,9 +158,13 @@ def ooc_gemm(
                            jnp.float32(alpha), jnp.float32(beta))
         return np.asarray(out) if backend == "host" else out
 
+    tuned = None
     if tune == "auto" and backend == "host":
-        part, nstreams, nbuf, traversal, evict = _tuned_gemm_config(
-            tuner, "gemm", M, N, K, budget_bytes, A.dtype)
+        tuned = _tuned_gemm_plan(tuner, "gemm", M, N, K, budget_bytes,
+                                 A.dtype)
+        part, nstreams, nbuf = (tuned.gemm_partition(), tuned.nstreams,
+                                tuned.nbuf)
+        traversal, evict = tuned.traversal, tuned.evict
     else:
         part = plan_gemm_partition(M, N, K, budget_bytes, bpe)
     if backend == "host":
@@ -153,7 +173,9 @@ def ooc_gemm(
         if validate:
             validate_schedule(sched)
         rt = runtime or HostOocRuntime()
-        return rt.gemm(A, B, C, alpha, beta, part, schedule=sched)
+        out = rt.gemm(A, B, C, alpha, beta, part, schedule=sched)
+        _record_host_drift(tuned, rt, sched)
+        return out
     if backend == "vmem":
         rt = runtime or VmemOocRuntime()
         return rt.gemm(A, B, C, alpha, beta, part)
@@ -227,9 +249,13 @@ def ooc_syrk(
                            jnp.float32(alpha), jnp.float32(beta))
         return np.asarray(out) if backend == "host" else out
 
+    tuned = None
     if tune == "auto" and backend == "host":
-        part, nstreams, nbuf, traversal, evict = _tuned_gemm_config(
-            tuner, "syrk", n, n, K, budget_bytes, P.dtype)
+        tuned = _tuned_gemm_plan(tuner, "syrk", n, n, K, budget_bytes,
+                                 P.dtype)
+        part, nstreams, nbuf = (tuned.gemm_partition(), tuned.nstreams,
+                                tuned.nbuf)
+        traversal, evict = tuned.traversal, tuned.evict
     else:
         part = plan_gemm_partition(n, n, K, budget_bytes, bpe)
     if backend == "host":
@@ -238,7 +264,9 @@ def ooc_syrk(
         if validate:
             validate_schedule(sched)
         rt = runtime or HostOocRuntime()
-        return rt.syrk(P, C, alpha, beta, part, schedule=sched)
+        out = rt.syrk(P, C, alpha, beta, part, schedule=sched)
+        _record_host_drift(tuned, rt, sched)
+        return out
     # "vmem": the only other backend the top-of-function guard admits
     rt = runtime or VmemOocRuntime()
     return rt.gemm(P, jnp.asarray(P).T, C, alpha, beta, part)

@@ -435,7 +435,7 @@ def compile_pipeline(
             payload=BlockRef(kernel=wb.kernel, index=spec.nsteps - 1),
         )
     b.sched.meta = {"traversal": getattr(spec, "traversal", "col"),
-                    "evict": evict}
+                    "evict": evict, "kernel": spec.name}
     b.sched.reuse = {name: c.stats() for name, c in caches.items()}
     return b.sched
 
@@ -1230,7 +1230,8 @@ def compile_factor_pipeline(
     assert not rest, "internal: trailing blocks left unemitted"
     assert fr_pos == len(fr_cache.next_use), \
         "internal: emission diverged from the residency pre-pass"
-    b.sched.meta = {"evict": evict, "kind": spec.kind}
+    b.sched.meta = {"evict": evict, "kind": spec.kind,
+                    "kernel": f"{spec.kind}-factor"}
     b.sched.reuse = {"Fr": fr_cache.stats()}
     return b.sched
 def build_gemm_schedule(

@@ -37,6 +37,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import pipeline as plib
 from repro.core.partitioner import GemmPartition, plan_gemm_partition
 from repro.core.streams import BlockRef, Device, Op, OpKind, Schedule, SliceRef
+from repro.obs import get_observability
 
 
 class OocRuntime:
@@ -192,18 +193,32 @@ class ScheduleExecutor:
     the ground truth the simulator's modeled byte counts are asserted
     against (a cache-hit step has no H2D op, so skipped transfers are
     counted by neither).
+
+    When the process :class:`~repro.obs.Observability` is enabled, every
+    run publishes its aggregates (bytes, ops, flops, wall seconds,
+    block-cache counters, per-stream busy time when recording) as
+    ``repro_executor_*`` metrics, and recorded spans are absorbed into the
+    active tracer as one lane-group (``trace_group`` names it; the hybrid
+    co-scheduler passes the device name).  Disabled observability costs one
+    branch per run.
     """
 
     def __init__(self,
                  handlers: Optional[Dict[str, HandlerFn]] = None,
                  async_writeback: bool = True,
-                 record_spans: bool = False):
+                 record_spans: bool = False,
+                 trace_group: Optional[str] = None):
         self.handlers = dict(handlers) if handlers else {}
         self.async_writeback = async_writeback
         self.record_spans = record_spans
+        # lane-group name used when recorded spans are absorbed into an
+        # active obs tracer (the hybrid co-scheduler names executors after
+        # their device); None derives one from the schedule's kernel meta
+        self.trace_group = trace_group
         self.last_spans: List[Tuple[str, int, float, float]] = []
         self.last_h2d_bytes = 0
         self.last_d2h_bytes = 0
+        self.last_wall_seconds = 0.0
 
     def _handler(self, ref: BlockRef) -> HandlerFn:
         fn = self.handlers.get(ref.kernel) or _OP_HANDLERS.get(ref.kernel)
@@ -238,12 +253,21 @@ class ScheduleExecutor:
             else:
                 dest[rs:rs + rn] = arr
 
-        trace = self.record_spans
-        if trace:
-            self.last_spans = []
-            t_base = time.perf_counter()
+        # stale spans from a prior run must never leak into a new trace,
+        # so the reset is unconditional (not gated on record_spans)
+        self.last_spans = []
         self.last_h2d_bytes = 0
         self.last_d2h_bytes = 0
+        obs = get_observability()
+        tracer = obs.tracer
+        # an active tracer forces span recording: a trace is inspection
+        # mode by definition, and a silent executor would leave a hole in
+        # the timeline
+        trace = self.record_spans or tracer is not None
+        run_offset = tracer.now() if tracer is not None else 0.0
+        t_run0 = time.perf_counter()
+        if trace:
+            t_base = t_run0
 
         for op in sched.ops:
             ref = op.payload
@@ -285,6 +309,18 @@ class ScheduleExecutor:
                     (op.tag, op.stream, t0, time.perf_counter() - t_base))
         for key in list(pending):
             flush(key)
+        self.last_wall_seconds = time.perf_counter() - t_run0
+        if obs.metrics.enabled:
+            obs.record_executor_run(
+                sched, self.last_wall_seconds,
+                self.last_h2d_bytes, self.last_d2h_bytes,
+                spans=self.last_spans if trace else None)
+        if tracer is not None and trace and self.last_spans:
+            tracer.add_flat_spans(
+                self.trace_group
+                or f"executor:{sched.meta.get('kernel', 'run')}",
+                self.last_spans, offset=run_offset,
+                reuse=sched.reuse or None)
         return st
 
 

@@ -24,6 +24,7 @@ Chrome-trace lane-group per device (pid = device index).
 from __future__ import annotations
 
 import dataclasses
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -34,9 +35,10 @@ from repro.core.pipeline import (attention_pipeline_spec, compile_pipeline,
 from repro.core.runtime import (ExecState, OocRuntime, ScheduleExecutor,
                                 register_op_handler, register_runtime)
 from repro.core.simulator import SimResult, simulate
-from repro.core.streams import (BlockRef, Device, Op, Schedule,
+from repro.core.streams import (BlockRef, Device, Op, OpKind, Schedule,
                                 validate_schedule)
 from repro.core.trace import Span, chrome_trace_groups
+from repro.obs import get_observability
 from repro.hybrid.balance import DeviceSpec
 from repro.hybrid.plan import (DevicePlan, HybridPlan, _as_device_specs,
                                plan_hybrid_attention, plan_hybrid_gemm,
@@ -116,21 +118,80 @@ def _run_concurrent(jobs) -> list:
 
 
 def _execute(hplan: HybridPlan, make_io, ctx: Dict,
-             record_spans: bool, validate: bool) -> SpanGroups:
+             record_spans: bool,
+             validate: bool) -> Tuple[SpanGroups, Dict[str, float]]:
     """Shared driver: per device, build (operands, outputs) via ``make_io``
-    and run the compiled sub-schedule on a private executor."""
+    and run the compiled sub-schedule on a private executor.
+
+    Returns ``(span_groups, stats)``; ``stats`` aggregates the measured
+    executor byte counters and the schedules' modeled byte totals (equal by
+    construction — the conformance tests pin it) plus per-device wall
+    seconds.  When an obs tracer is active, spans are force-recorded so
+    each device's pipeline lands in the trace as its own lane-group (the
+    executor absorbs them under ``trace_group=device name``), and per-device
+    lag is published as ``repro_hybrid_*`` metrics.
+    """
+    obs = get_observability()
+    record = record_spans or obs.tracer is not None
 
     def job(dp: DevicePlan):
         sched = device_schedule(hplan, dp)
         if validate:
             validate_schedule(sched)
-        ex = ScheduleExecutor(record_spans=record_spans)
+        ex = ScheduleExecutor(record_spans=record,
+                              trace_group=dp.device.name)
         operands, outputs = make_io(dp)
+        t0 = time.perf_counter()
         ex.run(sched, operands=operands, outputs=outputs, ctx=ctx)
-        return dp.device.name, list(ex.last_spans)
+        return {
+            "name": dp.device.name,
+            "spans": list(ex.last_spans),
+            "wall": time.perf_counter() - t0,
+            "h2d": ex.last_h2d_bytes,
+            "d2h": ex.last_d2h_bytes,
+            "sched_h2d": sched.total_bytes(OpKind.H2D),
+            "sched_d2h": sched.total_bytes(OpKind.D2H),
+        }
 
-    return _run_concurrent([
+    results = _run_concurrent([
         (lambda dp=dp: job(dp)) for dp in hplan.device_plans])
+    walls = [r["wall"] for r in results]
+    stats = {
+        "h2d_bytes": sum(r["h2d"] for r in results),
+        "d2h_bytes": sum(r["d2h"] for r in results),
+        "sched_h2d_bytes": sum(r["sched_h2d"] for r in results),
+        "sched_d2h_bytes": sum(r["sched_d2h"] for r in results),
+        "lag_seconds": max(walls) - min(walls),
+        "wall_seconds": max(walls),
+    }
+    if obs.metrics.enabled:
+        m = obs.metrics
+        m.counter("repro_hybrid_runs_total",
+                  "hybrid co-executions").inc(kernel=hplan.kernel)
+        for r in results:
+            m.gauge("repro_hybrid_device_wall_seconds",
+                    "per-device wall seconds, last hybrid run").set(
+                        r["wall"], kernel=hplan.kernel, device=r["name"])
+        m.gauge("repro_hybrid_lag_seconds",
+                "slowest-minus-fastest device wall, last hybrid run").set(
+                    stats["lag_seconds"], kernel=hplan.kernel)
+    return [(r["name"], r["spans"]) for r in results], stats
+
+
+def _record_hybrid_drift(obs, hplan: HybridPlan, wall_seconds: float,
+                         stats: Dict[str, float]) -> None:
+    """One drift record per hybrid run: the balancer's aggregate makespan
+    prediction vs measured wall, and modeled vs measured byte totals (equal
+    by construction).  Tier is ``HYBRID``; the device set stands in for the
+    hardware fingerprint."""
+    obs.record_drift(
+        hplan.kernel, "HYBRID", "+".join(hplan.device_names()),
+        predicted_makespan=hplan.predicted_makespan,
+        measured_seconds=wall_seconds,
+        predicted_h2d_bytes=int(stats["sched_h2d_bytes"]),
+        measured_h2d_bytes=int(stats["h2d_bytes"]),
+        predicted_d2h_bytes=int(stats["sched_d2h_bytes"]),
+        measured_d2h_bytes=int(stats["d2h_bytes"]))
 
 
 def run_hybrid_gemm(A, B, C, alpha: float, beta: float, hplan: HybridPlan,
@@ -158,8 +219,14 @@ def run_hybrid_gemm(A, B, C, alpha: float, beta: float, hplan: HybridPlan,
         lo, hi = dp.start, dp.start + dp.length
         return ({"A": A[lo:hi], "B": B}, {"C": out[lo:hi]})
 
-    groups = _execute(hplan, make_io, {"alpha": alpha, "beta": beta},
-                      record_spans, validate)
+    obs = get_observability()
+    t0 = time.perf_counter()
+    groups, stats = _execute(hplan, make_io, {"alpha": alpha, "beta": beta},
+                             record_spans, validate)
+    with obs.span("merge", cat="merge", kernel="gemm",
+                  mode="in-place-bands"):
+        pass  # disjoint C row bands: the merge is the writes themselves
+    _record_hybrid_drift(obs, hplan, time.perf_counter() - t0, stats)
     return out, groups
 
 
@@ -181,8 +248,14 @@ def run_hybrid_syrk(P, C, alpha: float, beta: float, hplan: HybridPlan,
         lo, hi = dp.start, dp.start + dp.length
         return ({"P": P[lo:hi], _SYRK_FULL_PANEL: P}, {"C": out[lo:hi]})
 
-    groups = _execute(hplan, make_io, {"alpha": alpha, "beta": beta},
-                      record_spans, validate)
+    obs = get_observability()
+    t0 = time.perf_counter()
+    groups, stats = _execute(hplan, make_io, {"alpha": alpha, "beta": beta},
+                             record_spans, validate)
+    with obs.span("merge", cat="merge", kernel="syrk",
+                  mode="in-place-bands"):
+        pass  # disjoint C row bands: the merge is the writes themselves
+    _record_hybrid_drift(obs, hplan, time.perf_counter() - t0, stats)
     return out, groups
 
 
@@ -212,9 +285,23 @@ def run_hybrid_attention(q, k_cache, v_cache, hplan: HybridPlan,
         return ({"K": k_cache[lo:hi], "V": v_cache[lo:hi]},
                 {"m": partial[0], "l": partial[1], "acc": partial[2]})
 
-    groups = _execute(hplan, make_io, {"q": q}, record_spans, validate)
-    out = merge_attention_partials(
-        [parts[dp.device.name] for dp in hplan.device_plans])
+    obs = get_observability()
+    t0 = time.perf_counter()
+    groups, stats = _execute(hplan, make_io, {"q": q}, record_spans,
+                             validate)
+    with obs.span("merge", cat="merge", kernel="attention",
+                  mode="flash-partials",
+                  n_partials=len(hplan.device_plans)):
+        t_m = time.perf_counter()
+        out = merge_attention_partials(
+            [parts[dp.device.name] for dp in hplan.device_plans])
+        merge_s = time.perf_counter() - t_m
+    if obs.metrics.enabled:
+        obs.metrics.gauge(
+            "repro_hybrid_merge_seconds",
+            "host-side partial-merge seconds, last hybrid run").set(
+                merge_s, kernel="attention")
+    _record_hybrid_drift(obs, hplan, time.perf_counter() - t0, stats)
     return out, groups
 
 

@@ -28,6 +28,7 @@ import tempfile
 import threading
 from typing import Dict, Optional, Sequence
 
+from repro.obs import get_observability
 from repro.tune.search import TunedPlan
 
 _ENV_VAR = "REPRO_TUNE_CACHE"
@@ -104,23 +105,34 @@ class PlanCache:
 
     # -- API ----------------------------------------------------------------
     def get(self, key: str) -> Optional[TunedPlan]:
+        m = get_observability().metrics
         with self._lock:           # counters update under the lock too, so
             raw = self._load().get(key)   # concurrent gets never lose a tick
             if raw is None:
                 self.misses += 1
+                m.counter("repro_plancache_misses_total",
+                          "plan-cache lookups that re-search").inc()
                 return None
             try:
                 plan = TunedPlan.from_json(raw)
             except (TypeError, KeyError, ValueError):
                 self.misses += 1   # schema drift: treat as miss, overwrite
+                m.counter("repro_plancache_misses_total",
+                          "plan-cache lookups that re-search").inc()
+                m.counter("repro_plancache_schema_drift_total",
+                          "cached plans rejected as unparseable").inc()
                 return None
             self.hits += 1
+            m.counter("repro_plancache_hits_total",
+                      "plan-cache lookups served without a search").inc()
             return plan
 
     def put(self, key: str, plan: TunedPlan) -> None:
         with self._lock:
             self._load()[key] = plan.to_json()
             self._store()
+        get_observability().metrics.counter(
+            "repro_plancache_puts_total", "plans stored").inc()
 
     def clear(self) -> None:
         with self._lock:

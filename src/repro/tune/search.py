@@ -19,6 +19,8 @@ identical inputs always produce an identical plan.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import time
 from typing import Dict, Sequence, Tuple, Union
 
 import numpy as np
@@ -31,6 +33,7 @@ from repro.core.pipeline import (attention_pipeline_spec,
                                  factor_pipeline_spec, gemm_pipeline_spec,
                                  syrk_pipeline_spec)
 from repro.core.simulator import simulate
+from repro.obs import get_observability
 from repro.tune.calibrate import HardwareProfile
 from repro.tune.space import attention_search_space, gemm_search_space
 
@@ -110,6 +113,40 @@ def _rank_key(makespan: float, cand_ns: int, cand_nb: int,
     return (makespan, cand_ns, cand_nb, -bm, -bn, idx)
 
 
+def _observed(label_of):
+    """Wrap a ``search_*`` entry point with a ``tune.search`` span plus
+    per-search count/latency metrics.  Decorating here (not in AutoTuner)
+    covers *every* caller — the tuner, the hybrid balancer's per-device
+    searches, direct test calls — with one guard."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*a, **kw):
+            obs = get_observability()
+            kernel = label_of(*a, **kw)
+            t0 = time.perf_counter()
+            with obs.span("tune.search", cat="tune", kernel=kernel):
+                plan = fn(*a, **kw)
+            if obs.metrics.enabled:
+                m = obs.metrics
+                m.counter("repro_tune_searches_total",
+                          "plan searches run").inc(kernel=kernel)
+                m.histogram("repro_tune_search_seconds",
+                            "wall seconds per plan search").observe(
+                                time.perf_counter() - t0, kernel=kernel)
+            return plan
+        return wrapper
+    return deco
+
+
+def _count_candidates(kernel: str, n: int) -> None:
+    m = get_observability().metrics
+    if m.enabled:
+        m.counter("repro_tune_candidates_total",
+                  "pipeline candidates ranked by simulate()").inc(
+                      n, kernel=kernel)
+
+
+@_observed(lambda *a, **kw: kw.get("kernel", "gemm"))
 def search_gemm(
     M: int,
     N: int,
@@ -163,6 +200,7 @@ def search_gemm(
         raise ValueError(
             f"no feasible pipeline configuration for GEMM {(M, N, K)} "
             f"within {budget_bytes}B (max_steps={max_steps})")
+    _count_candidates(kernel, len(space))
 
     best = None
     best_key = None
@@ -209,6 +247,7 @@ def search_gemm(
     )
 
 
+@_observed(lambda kind, *a, **kw: f"{kind}-factor")
 def search_factor(
     kind: str,
     n: int,
@@ -283,6 +322,7 @@ def search_factor(
                         if best_key is None or key < best_key:
                             best, best_key = (spec, ns, nb, ev, res), key
                         idx += 1
+    _count_candidates(f"{kind}-factor", idx)
     if best is None:
         raise ValueError(
             f"no feasible {kind} pipeline for n={n}, panel<={panel} "
@@ -316,6 +356,7 @@ def search_factor(
     )
 
 
+@_observed(lambda *a, **kw: "attention")
 def search_attention(
     seq_len: int,
     kv_heads: int,
@@ -341,6 +382,7 @@ def search_attention(
         raise ValueError(
             f"no feasible attention configuration for S={seq_len} "
             f"within {budget_bytes}B")
+    _count_candidates("attention", len(space))
 
     best = None
     best_key = None

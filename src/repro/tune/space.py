@@ -22,11 +22,24 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterator, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.core.partitioner import (LANE, SUBLANE, AttentionPartition,
                                     GemmPartition, plan_attention_partition,
                                     plan_gemm_partition)
+from repro.obs import get_observability
+
+
+def _count_pruned(space: str, pruned: Dict[str, int]) -> None:
+    """Publish per-reason pruning totals (one call per enumeration, so the
+    disabled cost is a single branch)."""
+    m = get_observability().metrics
+    if m.enabled:
+        for reason, n in pruned.items():
+            if n:
+                m.counter("repro_tune_candidates_pruned_total",
+                          "candidates dropped before simulation").inc(
+                              n, space=space, reason=reason)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,15 +136,19 @@ def gemm_search_space(
         raise ValueError("budget must be positive")
     seen = set()
     out: List[GemmCandidate] = []
+    pruned = {"max_steps": 0, "infeasible": 0}
 
     def add(part: GemmPartition, ns: int, nb: int, wb: bool,
             baseline: bool = False, traversal: str = "col",
             evict: str = "lru") -> None:
         key = (part.bm, part.bn, ns, nb, wb, traversal, evict)
+        if key in seen:
+            return
         # the baseline is exempt from max_steps: whatever tune=None would
         # run must stay rankable, or the tuner could fail (empty space) or
         # lose to the very default it exists to beat
-        if key in seen or (part.nblocks > max_steps and not baseline):
+        if part.nblocks > max_steps and not baseline:
+            pruned["max_steps"] += 1
             return
         seen.add(key)
         out.append(GemmCandidate(part, ns, nb, wb, baseline, traversal,
@@ -163,6 +180,8 @@ def gemm_search_space(
                                     add(part, ns, nb, wb, traversal=trav,
                                         evict=ev)
                             break
+                        pruned["infeasible"] += 1
+    _count_pruned("gemm", pruned)
     return out
 
 
@@ -190,11 +209,15 @@ def attention_search_space(
     per_pos = 2 * kv_heads * head_dim * bytes_per_el
     seen = set()
     out: List[AttentionCandidate] = []
+    pruned = {"max_steps": 0, "infeasible": 0}
 
     def add(part: AttentionPartition, ns: int, nb: int,
             baseline: bool = False) -> None:
         key = (part.bs, ns, nb)
-        if key in seen or (part.nblocks > max_steps and not baseline):
+        if key in seen:
+            return
+        if part.nblocks > max_steps and not baseline:
+            pruned["max_steps"] += 1
             return
         seen.add(key)
         out.append(AttentionCandidate(part, ns, nb, baseline))
@@ -215,4 +238,6 @@ def attention_search_space(
                         bytes_per_el, budget_bytes)
                     add(part, ns, nb)
                     break
+                pruned["infeasible"] += 1
+    _count_pruned("attention", pruned)
     return out

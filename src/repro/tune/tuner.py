@@ -20,6 +20,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.obs import get_observability
 from repro.tune.cache import PlanCache
 from repro.tune.calibrate import (CalibrationResult, HardwareProfile,
                                   calibrate, hardware_fingerprint)
@@ -81,26 +82,39 @@ class AutoTuner:
         return self._fingerprint
 
     # -- plans --------------------------------------------------------------
+    def _cached_plan(self, key: str, kernel: str, search) -> TunedPlan:
+        """The one cache-or-search decision every plan method funnels
+        through: a ``tune.plan`` span brackets the whole decision and a
+        ``plancache.get`` span isolates the lookup, so a trace shows
+        whether a run planned from cache or paid for a search."""
+        obs = get_observability()
+        with obs.span("tune.plan", cat="tune", kernel=kernel,
+                      tier=self.tier) as sp:
+            with obs.span("plancache.get", cat="tune", key=key):
+                plan = self.cache.get(key)
+            if plan is not None:
+                self.last_from_cache = True
+                sp.annotate(from_cache=True)
+                return plan
+            self.last_from_cache = False
+            self.searches += 1
+            plan = search()
+            self.cache.put(key, plan)
+            sp.annotate(from_cache=False, makespan=plan.makespan)
+            return plan
+
     def gemm_plan(self, M: int, N: int, K: int, budget_bytes: int,
                   dtype: str = "float32", kernel: str = "gemm") -> TunedPlan:
         dtype = np.dtype(dtype).name   # one spelling per dtype in cache keys
         key = PlanCache.key(kernel, (M, N, K), dtype, self.tier,
                             budget_bytes, self.fingerprint)
-        plan = self.cache.get(key)
-        if plan is not None:
-            self.last_from_cache = True
-            return plan
-        self.last_from_cache = False
-        self.searches += 1
-        plan = search_gemm(
+        return self._cached_plan(key, kernel, lambda: search_gemm(
             M, N, K, budget_bytes, self.profile,
             kernel=kernel, dtype=dtype, tier=self.tier,
             fingerprint=self.fingerprint,
             nstreams_options=self.nstreams_options,
             nbuf_options=self.nbuf_options,
-            max_steps=self.max_steps)
-        self.cache.put(key, plan)
-        return plan
+            max_steps=self.max_steps))
 
     def syrk_plan(self, n: int, K: int, budget_bytes: int,
                   dtype: str = "float32") -> TunedPlan:
@@ -120,20 +134,13 @@ class AutoTuner:
         dtype = np.dtype(dtype).name
         key = PlanCache.key(f"{kind}-factor", (n, panel), dtype, self.tier,
                             budget_bytes, self.fingerprint)
-        plan = self.cache.get(key)
-        if plan is not None:
-            self.last_from_cache = True
-            return plan
-        self.last_from_cache = False
-        self.searches += 1
-        plan = search_factor(
+        return self._cached_plan(key, f"{kind}-factor",
+                                 lambda: search_factor(
             kind, n, panel, budget_bytes, self.profile,
             dtype=dtype, tier=self.tier, fingerprint=self.fingerprint,
             nstreams_options=self.nstreams_options,
             nbuf_options=self.nbuf_options,
-            max_steps=max(self.max_steps, 4096))
-        self.cache.put(key, plan)
-        return plan
+            max_steps=max(self.max_steps, 4096)))
 
     def attention_plan(self, seq_len: int, kv_heads: int, head_dim: int,
                        q_heads: int, budget_bytes: int,
@@ -142,13 +149,8 @@ class AutoTuner:
         key = PlanCache.key("attention", (seq_len, kv_heads, head_dim,
                                           q_heads), dtype, self.tier,
                             budget_bytes, self.fingerprint)
-        plan = self.cache.get(key)
-        if plan is not None:
-            self.last_from_cache = True
-            return plan
-        self.last_from_cache = False
-        self.searches += 1
-        plan = search_attention(
+        return self._cached_plan(key, "attention",
+                                 lambda: search_attention(
             seq_len, kv_heads, head_dim, q_heads, budget_bytes,
             self.profile,
             dtype=dtype, tier=self.tier,
@@ -156,9 +158,7 @@ class AutoTuner:
             nstreams_options=self.nstreams_options,
             nbuf_options=tuple(nb for nb in self.nbuf_options if nb >= 2)
             or (2,),
-            max_steps=max(self.max_steps, 4096))
-        self.cache.put(key, plan)
-        return plan
+            max_steps=max(self.max_steps, 4096)))
 
 
 _default_tuner: Optional[AutoTuner] = None

@@ -1,0 +1,338 @@
+"""Observability layer (DESIGN.md §10): registry, tracer, drift, conformance.
+
+The acceptance bar (ISSUE 7): the metric registry round-trips through its
+JSON snapshot and emits stable Prometheus v0.0.4 text; the tracer nests
+spans per thread and absorbs flat executor span groups onto distinct pids
+of one Chrome-trace doc; drift ratios follow their definitions and
+``stale()`` flags trends, not constant scale; and — the conformance core —
+the counters an instrumented run publishes (``repro_executor_h2d_bytes``
+etc.) agree *exactly* with the schedule's own modeled totals
+(``schedule_stats`` / ``Schedule.total_bytes``) on a seeded GEMM and on a
+hybrid co-execution, where byte drift ratios must be exactly 1.0.
+"""
+
+import json
+import subprocess
+import sys
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (HostOocRuntime, OpKind, ScheduleExecutor,
+                        build_gemm_schedule, ooc_gemm, plan_gemm_partition)
+from repro.core.api import hclObservability
+from repro.core.pipeline import schedule_stats
+from repro.hybrid import DeviceSpec
+from repro.obs import (DriftMonitor, MetricRegistry, Observability, Tracer,
+                       get_observability)
+from repro.tune import gpu_profile, phi_profile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Every test sees (and leaves) a disabled, empty singleton."""
+    obs = get_observability()
+    obs.reset()
+    obs.disable()
+    yield obs
+    obs.reset()
+    obs.disable()
+
+
+# ------------------------------------------------------------------ metrics
+def test_counter_labels_and_disabled_guard():
+    reg = MetricRegistry(enabled=True)
+    c = reg.counter("repro_test_total", "help text")
+    c.inc(kernel="gemm")
+    c.inc(2, kernel="gemm")
+    c.inc(kernel="syrk")
+    assert c.value(kernel="gemm") == 3
+    assert c.value(kernel="syrk") == 1
+    assert c.value(kernel="absent") == 0
+    with pytest.raises(ValueError):
+        c.inc(-1, kernel="gemm")
+    reg.enabled = False
+    c.inc(100, kernel="gemm")
+    assert c.value(kernel="gemm") == 3  # disabled inc is a no-op
+
+
+def test_gauge_set_add_and_histogram_stats():
+    reg = MetricRegistry(enabled=True)
+    g = reg.gauge("repro_test_gauge")
+    g.set(2.5, tier="HBM")
+    g.add(0.5, tier="HBM")
+    assert g.value(tier="HBM") == 3.0
+    h = reg.histogram("repro_test_seconds", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 5.0, 50.0):
+        h.observe(v)
+    s, n = h.stats()
+    assert n == 4 and s == pytest.approx(55.55)
+
+
+def test_redeclaring_name_as_other_type_raises():
+    reg = MetricRegistry(enabled=True)
+    reg.counter("repro_test_total")
+    reg.counter("repro_test_total")  # idempotent get-or-create
+    with pytest.raises(TypeError):
+        reg.gauge("repro_test_total")
+
+
+def test_snapshot_round_trips_through_from_snapshot():
+    reg = MetricRegistry(enabled=True)
+    reg.counter("repro_a_total", "a").inc(3, kernel="gemm")
+    reg.gauge("repro_b_ratio", "b").set(1.5, tier="HBM")
+    h = reg.histogram("repro_c_seconds", "c", buckets=(0.1, 1.0))
+    h.observe(0.05, kernel="lu")
+    h.observe(7.0, kernel="lu")
+    snap = reg.snapshot()
+    clone = MetricRegistry.from_snapshot(snap)
+    assert clone.to_prometheus_text() == reg.to_prometheus_text()
+    # and the snapshot itself is plain JSON
+    assert json.loads(json.dumps(snap)) == snap
+
+
+def test_prometheus_exposition_golden():
+    reg = MetricRegistry(enabled=True)
+    reg.counter("repro_runs_total", "runs").inc(2, kernel="gemm")
+    h = reg.histogram("repro_run_seconds", "wall", buckets=(0.5, 5.0))
+    h.observe(0.25, kernel="gemm")
+    h.observe(2.5, kernel="gemm")
+    assert reg.to_prometheus_text() == (
+        "# HELP repro_run_seconds wall\n"
+        "# TYPE repro_run_seconds histogram\n"
+        'repro_run_seconds_bucket{kernel="gemm",le="0.5"} 1\n'
+        'repro_run_seconds_bucket{kernel="gemm",le="5.0"} 2\n'
+        'repro_run_seconds_bucket{kernel="gemm",le="+Inf"} 2\n'
+        'repro_run_seconds_sum{kernel="gemm"} 2.75\n'
+        'repro_run_seconds_count{kernel="gemm"} 2\n'
+        "# HELP repro_runs_total runs\n"
+        "# TYPE repro_runs_total counter\n"
+        'repro_runs_total{kernel="gemm"} 2\n')
+
+
+# ------------------------------------------------------------------- tracer
+def test_tracer_nests_spans_and_absorbs_flat_groups():
+    t = [0.0]
+    tr = Tracer("test", clock=lambda: t[0])
+    with tr.span("outer", cat="tune"):
+        t[0] = 1.0
+        with tr.span("inner", cat="tune") as sp:
+            sp.annotate(from_cache=False)
+            t[0] = 2.0
+    spans = tr.spans()
+    outer = next(s for s in spans if s.name == "outer")
+    inner = next(s for s in spans if s.name == "inner")
+    assert inner.parent_id == outer.span_id and outer.parent_id is None
+    assert dict(inner.args)["from_cache"] == "False"
+    # flat groups land on their own pids, offset applied
+    tr.add_flat_spans("gpu0", [("h2d A[0]", 0, 0.0, 0.5)], offset=1.0)
+    tr.add_flat_spans("phi0", [("compute C[0]", 1, 0.0, 0.2)], offset=1.0)
+    doc = tr.to_chrome_trace()
+    pids = sorted({e["pid"] for e in doc["traceEvents"]})
+    assert pids == [0, 1, 2]  # control + two device lanes
+    names = {e["args"]["name"] for e in doc["traceEvents"]
+             if e.get("ph") == "M" and e["name"] == "process_name"}
+    assert {"test", "gpu0", "phi0"} <= names
+    summ = tr.summary()
+    assert summ["control_spans"] == 2
+    assert summ["groups"]["gpu0"]["spans"] == 1
+    assert summ["groups"]["phi0"]["span_seconds"] == pytest.approx(0.2)
+
+
+# -------------------------------------------------------------------- drift
+def test_drift_ratios_and_snapshot():
+    mon = DriftMonitor()
+    rec = mon.record("gemm", "HBM", "fp",
+                     predicted_makespan=2.0, measured_seconds=1.0,
+                     predicted_h2d_bytes=100, measured_h2d_bytes=100)
+    assert rec.time_ratio == 0.5 and rec.byte_ratio == 1.0
+    assert mon.ratio("gemm", "HBM", "fp") == 0.5
+    snap = mon.snapshot()
+    assert snap["rolling"]["gemm|HBM|fp"]["n"] == 1
+    assert snap["records"][0]["time_ratio"] == 0.5
+
+
+def test_stale_flags_trend_not_constant_scale():
+    mon = DriftMonitor(window=8)
+    # constant 50x model-vs-wall scale: ratio stable -> NOT stale
+    for _ in range(4):
+        mon.record("gemm", "HBM", "fp",
+                   predicted_makespan=1.0, measured_seconds=50.0)
+    assert mon.stale(threshold=1.25) == []
+    # the machine slows 3x relative to its own history -> stale
+    for _ in range(8):
+        mon.record("lu", "HBM", "fp",
+                   predicted_makespan=1.0, measured_seconds=1.0)
+        mon.record("lu", "HBM", "fp",
+                   predicted_makespan=1.0, measured_seconds=3.0)
+    stale = mon.stale(threshold=1.25)
+    assert [k for k, _ in stale] == [("lu", "HBM", "fp")]
+
+
+# ------------------------------------------------- executor conformance core
+def _seeded_gemm(m=256, n=256, k=128):
+    rng = np.random.default_rng(0)
+    A = rng.standard_normal((m, k)).astype(np.float32)
+    B = rng.standard_normal((k, n)).astype(np.float32)
+    C = np.zeros((m, n), dtype=np.float32)
+    budget = (A.nbytes + B.nbytes + C.nbytes) // 3
+    return A, B, C, budget
+
+
+def test_executor_counters_match_schedule_stats_exactly():
+    obs = get_observability()
+    obs.enable(metrics=True)
+    A, B, C, budget = _seeded_gemm()
+    part = plan_gemm_partition(A.shape[0], B.shape[1], A.shape[1], budget, 4)
+    sched = build_gemm_schedule(part)
+    ex = ScheduleExecutor()
+    HostOocRuntime(executor=ex).gemm(A, B, C, 1.0, 0.0, part,
+                                     schedule=sched)
+    stats = schedule_stats(sched)
+    m = obs.metrics
+    # executor byte counters == schedule-modeled totals, exactly
+    assert ex.last_h2d_bytes == stats["h2d_bytes"] \
+        == sched.total_bytes(OpKind.H2D)
+    assert ex.last_d2h_bytes == stats["d2h_bytes"] \
+        == sched.total_bytes(OpKind.D2H)
+    assert m.get("repro_executor_h2d_bytes").value(kernel="gemm") \
+        == stats["h2d_bytes"]
+    assert m.get("repro_executor_d2h_bytes").value(kernel="gemm") \
+        == stats["d2h_bytes"]
+    assert m.get("repro_executor_flops_total").value(kernel="gemm") \
+        == stats["flops"]
+    assert m.get("repro_executor_runs_total").value(kernel="gemm") == 1
+    _, n_runs = m.get("repro_executor_run_seconds").stats(kernel="gemm")
+    assert n_runs == 1
+
+
+def test_tuned_gemm_records_drift_with_unit_byte_ratio(tmp_path):
+    from repro.tune import AutoTuner, PlanCache
+
+    obs = get_observability()
+    obs.enable(metrics=True)
+    A, B, C, budget = _seeded_gemm()
+    tuner = AutoTuner(profile=gpu_profile(), fingerprint="test",
+                      cache=PlanCache(str(tmp_path / "plans.json")),
+                      max_steps=128, nbuf_options=(1, 2))
+    out = ooc_gemm(A, B, budget_bytes=budget, tune="auto", tuner=tuner)
+    assert np.abs(out - A @ B).max() < 1e-2
+    recs = obs.drift.records("gemm")
+    assert len(recs) == 1
+    rec = recs[0]
+    assert rec.predicted_makespan > 0 and rec.measured_seconds > 0
+    assert rec.byte_ratio == 1.0
+    assert rec.measured_h2d_bytes == rec.predicted_h2d_bytes > 0
+    assert rec.measured_d2h_bytes == rec.predicted_d2h_bytes
+    # tuner search instrumented too
+    assert obs.metrics.get("repro_tune_searches_total") is not None
+
+
+def test_hybrid_run_conformance_and_single_trace(tmp_path):
+    obs = get_observability()
+    obs.enable(metrics=True, trace=True, trace_name="acceptance")
+    A, B, C, budget = _seeded_gemm(m=512)
+    devices = [DeviceSpec("gpu0", gpu_profile(), budget),
+               DeviceSpec("phi0", phi_profile(), budget)]
+    out = ooc_gemm(A, B, budget_bytes=budget, tune="auto",
+                   devices=devices, tolerance=0.1)
+    assert np.abs(out - A @ B).max() < 1e-2
+    # hybrid drift: bytes exact, prediction present
+    recs = [r for r in obs.drift.records("gemm") if r.tier == "HYBRID"]
+    assert len(recs) == 1
+    assert recs[0].byte_ratio == 1.0
+    assert recs[0].fingerprint == "gpu0+phi0"
+    assert recs[0].predicted_makespan > 0
+    # one trace doc: control pid + one executor lane-group per device
+    doc = obs.tracer.to_chrome_trace()
+    lanes = {e["args"]["name"] for e in doc["traceEvents"]
+             if e.get("ph") == "M" and e["name"] == "process_name"}
+    assert {"acceptance", "gpu0", "phi0"} <= lanes
+    cats = {e.get("cat") for e in doc["traceEvents"] if e.get("ph") == "X"}
+    assert "tune" in cats and "merge" in cats
+    assert obs.metrics.get("repro_hybrid_runs_total").value(
+        kernel="gemm") == 1
+
+
+def test_last_spans_reset_between_runs():
+    A, B, C, budget = _seeded_gemm()
+    part = plan_gemm_partition(A.shape[0], B.shape[1], A.shape[1], budget, 4)
+    sched = build_gemm_schedule(part)
+    ex = ScheduleExecutor(record_spans=True)
+    rt = HostOocRuntime(executor=ex)
+    rt.gemm(A, B, C.copy(), 1.0, 0.0, part, schedule=sched)
+    assert ex.last_spans
+    ex.record_spans = False
+    rt.gemm(A, B, C.copy(), 1.0, 0.0, part, schedule=sched)
+    # stale spans from the recorded run must not leak into the second
+    assert ex.last_spans == []
+
+
+def test_disabled_obs_records_nothing():
+    obs = get_observability()
+    A, B, C, budget = _seeded_gemm()
+    part = plan_gemm_partition(A.shape[0], B.shape[1], A.shape[1], budget, 4)
+    HostOocRuntime().gemm(A, B, C, 1.0, 0.0, part)
+    assert obs.metrics.snapshot()["metrics"] == []
+    assert obs.drift.records() == []
+
+
+# ---------------------------------------------------------- facade + tools
+def test_hcl_facade_returns_enabled_singleton():
+    obs = hclObservability(enable=True, trace=True, trace_name="facade")
+    assert obs is get_observability()
+    assert obs.metrics.enabled and obs.tracer is not None
+    assert obs.tracer.name == "facade"
+    assert hclObservability() is obs  # bare call = accessor, no state change
+    assert obs.metrics.enabled
+
+
+def test_observability_snapshot_shape():
+    obs = Observability()
+    obs.enable(metrics=True, trace=True)
+    obs.metrics.counter("repro_x_total").inc()
+    obs.record_drift("gemm", "HBM", "fp",
+                     predicted_makespan=1.0, measured_seconds=2.0)
+    with obs.span("phase"):
+        pass
+    snap = obs.snapshot()
+    assert {f["name"] for f in snap["metrics"]} >= {
+        "repro_x_total", "repro_drift_records_total",
+        "repro_drift_time_ratio", "repro_drift_byte_ratio"}
+    assert snap["drift"]["rolling"]["gemm|HBM|fp"]["last_time_ratio"] == 2.0
+    assert snap["trace"]["control_spans"] == 1
+    assert json.loads(json.dumps(snap)) == snap
+
+
+def test_export_trace_stdout_summary_smoke():
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "export_trace.py"),
+         "--mode", "sim", "--M", "256", "--N", "256", "--K", "128",
+         "--budget-mb", "0.5", "--out", "-", "--summary"],
+        capture_output=True, text=True, timeout=120,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")})
+    assert proc.returncode == 0, proc.stderr
+    doc = json.loads(proc.stdout)  # stdout is pure JSON
+    assert doc["traceEvents"]
+    assert doc["otherData"]["h2d_bytes"] > 0
+    assert "summary:" in proc.stderr and "pid 0" in proc.stderr
+
+
+def test_run_report_renders_snapshot_markdown():
+    sys.path.insert(0, os.path.join(REPO, "scripts"))
+    try:
+        from run_report import render_markdown
+    finally:
+        sys.path.pop(0)
+    obs = Observability()
+    obs.enable(metrics=True)
+    obs.metrics.counter("repro_executor_runs_total").inc(kernel="gemm")
+    obs.record_drift("gemm", "HBM", "fp", predicted_makespan=1.0,
+                     measured_seconds=2.0, predicted_h2d_bytes=10,
+                     measured_h2d_bytes=10)
+    md = render_markdown(obs.snapshot())
+    assert "`repro_executor_runs_total`" in md
+    assert "`gemm|HBM|fp`" in md and "| 1 |" in md  # byte ratio column

@@ -71,7 +71,9 @@ def test_gemm_schedules_validate(traversal, evict, nstreams, nbuf):
         gemm_pipeline_spec(part, traversal=traversal, band=nbuf),
         nstreams=nstreams, nbuf=nbuf, evict=evict)
     validate_schedule(sched)
-    assert sched.meta == {"traversal": traversal, "evict": evict}
+    assert sched.meta["traversal"] == traversal
+    assert sched.meta["evict"] == evict
+    assert sched.meta["kernel"] == "gemm"   # obs label (DESIGN.md §10)
 
 
 @pytest.mark.parametrize("traversal,evict", COMBOS)
