@@ -14,6 +14,12 @@ Also guards the observability layer's disabled cost (DESIGN.md §10): the
 instrumented kernel call pays when metrics/tracing are OFF (guard branches
 in ``record_executor_run`` / ``record_drift`` / ``span``) and asserts it
 stays under 2 % of the smallest GEMM's floor time.
+
+The ``analysis_cost`` row guards the attribution layer (DESIGN.md §11):
+one full :class:`~repro.obs.analyze.TraceAnalysis` — span pairing, exact
+critical-path walk, stream segmentation — over the paper-regime 8192^3
+fp64 GEMM trace must stay under 50 ms, so post-run attribution is always
+cheap enough to leave on.
 """
 
 from __future__ import annotations
@@ -74,6 +80,35 @@ def _obs_disabled_overhead(sched, t_floor: float) -> dict:
     }
 
 
+def _analysis_cost() -> dict:
+    """Time one exact attribution of the paper-regime 8192^3 fp64 GEMM
+    trace (claim C5's schedule) and guard it under 50 ms."""
+    from repro.core.partitioner import plan_gemm_partition
+    from repro.core.pipeline import compile_pipeline, gemm_pipeline_spec
+    from repro.core.simulator import simulate
+    from repro.obs.analyze import TraceAnalysis
+    from repro.tune import gpu_profile
+
+    m = 8192
+    budget = (3 * m * m * 8) // 6
+    part = plan_gemm_partition(m, m, m, budget, 8, nbuf=2, nstreams=2)
+    sched = compile_pipeline(gemm_pipeline_spec(part, band=2),
+                             nstreams=2, nbuf=2)
+    hw = gpu_profile().model_for(2)
+    res = simulate(sched, hw)
+    t, ana = _time(TraceAnalysis.from_sim, sched, res, hw=hw)
+    ana.verify_reconciliation(res)
+    assert t < 0.050, (
+        f"TraceAnalysis of the 8192^3 GEMM trace took {t*1e3:.1f}ms "
+        f"(guard: <50ms, {len(sched.ops)} ops)")
+    return {
+        "name": "analysis_cost",
+        "us_per_call": t * 1e6,
+        "derived": f"analyze {len(sched.ops)} ops={t*1e3:.2f}ms "
+                   f"verdict={ana.verdict} (guard: <50ms)",
+    }
+
+
 def run(sizes=((512, 512, 384), (1024, 768, 512), (1536, 1024, 512))):
     rng = np.random.default_rng(0)
     rows = []
@@ -125,4 +160,5 @@ def run(sizes=((512, 512, 384), (1024, 768, 512), (1536, 1024, 512))):
         })
     if guard_row is not None:
         rows.append(guard_row)
+    rows.append(_analysis_cost())
     return rows

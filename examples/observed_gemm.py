@@ -14,6 +14,10 @@ co-execution across the canned gpu+phi profiles — with the process
   3. **Drift** — predicted-vs-measured per (kernel, tier, fingerprint):
      byte ratios must be exactly 1.0; time ratios are the
      calibration-staleness trend signal.
+  4. **Attribution** (DESIGN.md §11) — the tuned plan's exact critical
+     path, bottleneck verdict and what-if sensitivity: which resource
+     buys the next makespan reduction, and why the tuner chose what it
+     chose.
 
 Runs on CPU in a few seconds.
 """
@@ -78,5 +82,23 @@ for key, row in sorted(obs.drift.snapshot()["rolling"].items()):
 for rec in obs.drift.records():
     assert rec.byte_ratio == 1.0, "executed bytes must match the model"
 print("byte ratios: all exactly 1.0 (executed == modeled transfers)")
+
+# 4. attribution: replay the tuned plan's schedule, walk its exact
+#    critical path, and ask what the next resource increment would buy
+from repro.obs.analyze import analyze_plan
+from repro.obs.whatif import whatif_plan
+
+plan = tuner.gemm_plan(M, N, K, budget)          # cache hit
+ana, res = analyze_plan(plan, gpu_profile())
+ana.verify_reconciliation(res)                    # exact, or AssertionError
+print("\n--- attribution (DESIGN.md §11) ---")
+print(ana.digest())
+for g in ana.top_gaps(3):
+    print(f"  idle s{g.stream} {g.duration*1e6:.1f}us before "
+          f"{g.next_tag or 'drain'}: {g.cause}")
+rep = whatif_plan(plan, gpu_profile())
+for sc in rep.ranked():
+    print(f"  what-if {sc.name}: {sc.gain_seconds*1e3:+.3f} ms "
+          f"({sc.speedup:.3f}x)")
 
 obs.reset()

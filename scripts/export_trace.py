@@ -41,6 +41,7 @@ from repro.core import (EVICT_POLICIES, TRAVERSALS, HostOocRuntime, OpKind,
                         compile_factor_pipeline, factor_pipeline_spec,
                         gpu_like, phi_like, plan_gemm_partition, simulate,
                         tpu_v5e_ici, tpu_v5e_vmem)
+from repro.obs.analyze import TraceAnalysis
 
 HW = {
     "gpu": lambda ns: gpu_like(),
@@ -56,13 +57,15 @@ log = print
 
 def _summarize(doc: dict) -> str:
     """Per-pid digest of a Chrome-trace doc: lane name, span count, busy
-    milliseconds per category — plus the modeled byte totals when the
+    milliseconds per category, and utilization (busy / (wall span × lanes))
+    — plus the modeled byte totals and attribution digest when the
     exporting mode attached them (``otherData``)."""
     lanes: dict = {}
     for e in doc.get("traceEvents", ()):
         pid = e.get("pid", 0)
         lane = lanes.setdefault(pid, {"name": f"pid {pid}", "spans": 0,
-                                      "busy_ms": {}})
+                                      "busy_ms": {}, "tids": set(),
+                                      "t0": None, "t1": None})
         if e.get("ph") == "M" and e.get("name") == "process_name":
             lane["name"] = e["args"]["name"]
         elif e.get("ph") == "X":
@@ -70,13 +73,24 @@ def _summarize(doc: dict) -> str:
             cat = e.get("cat", "span")
             lane["busy_ms"][cat] = (lane["busy_ms"].get(cat, 0.0)
                                     + e.get("dur", 0.0) / 1e3)
+            lane["tids"].add(e.get("tid", 0))
+            ts, dur = e.get("ts", 0.0), e.get("dur", 0.0)
+            lane["t0"] = ts if lane["t0"] is None else min(lane["t0"], ts)
+            lane["t1"] = (ts + dur if lane["t1"] is None
+                          else max(lane["t1"], ts + dur))
     lines = []
     for pid in sorted(lanes):
         lane = lanes[pid]
         cats = " ".join(f"{c}={ms:.2f}ms"
                         for c, ms in sorted(lane["busy_ms"].items()))
+        util = ""
+        if lane["t1"] is not None and lane["t1"] > lane["t0"]:
+            wall_ms = (lane["t1"] - lane["t0"]) / 1e3
+            frac = (sum(lane["busy_ms"].values())
+                    / (wall_ms * max(len(lane["tids"]), 1)))
+            util = f"  util={frac*100:.0f}%"
         lines.append(f"  pid {pid} [{lane['name']}]: {lane['spans']} spans"
-                     + (f"  {cats}" if cats else ""))
+                     + (f"  {cats}" if cats else "") + util)
     for k, v in sorted(doc.get("otherData", {}).items()):
         lines.append(f"  {k}: {v}")
     return "\n".join(lines)
@@ -118,6 +132,13 @@ def _hybrid_mode(args) -> None:
     doc["otherData"] = {
         "h2d_bytes": sum(s.total_bytes(OpKind.H2D) for s in scheds),
         "d2h_bytes": sum(s.total_bytes(OpKind.D2H) for s in scheds),
+        "analysis": {
+            dp.device.name: TraceAnalysis.from_sim(
+                sched, res,
+                hw=dp.device.profile.model_for(dp.plan.nstreams)).digest()
+            for dp, sched, (_, res) in zip(hplan.device_plans, scheds,
+                                           sim.per_device)
+        },
     }
     log(f"hybrid gemm {args.M}x{args.N}x{args.K}: aggregate makespan "
         f"{sim.makespan*1e3:.2f} ms across {len(hplan.device_plans)} "
@@ -141,8 +162,12 @@ def _factor_mode(args) -> None:
         f"{reuse.get('hits', 0)} hits / {reuse.get('misses', 0)} "
         f"transfers")
     doc = chrome_trace(res.op_spans, process_name=name, reuse=sched.reuse)
-    doc["otherData"] = {"h2d_bytes": sched.total_bytes(OpKind.H2D),
-                        "d2h_bytes": sched.total_bytes(OpKind.D2H)}
+    doc["otherData"] = {
+        "h2d_bytes": sched.total_bytes(OpKind.H2D),
+        "d2h_bytes": sched.total_bytes(OpKind.D2H),
+        "analysis": TraceAnalysis.from_sim(
+            sched, res, hw=HW[args.hw](args.nstreams)).digest(),
+    }
     _emit(doc, args)
 
 
@@ -198,9 +223,12 @@ def main() -> None:
     name = (f"gemm {args.M}x{args.N}x{args.K} h{part.h}xw{part.w} "
             f"s{args.nstreams}b{args.nbuf} {args.traversal}/{args.evict}")
 
+    analysis = None
     if args.mode == "sim":
-        res = simulate(sched, HW[args.hw](args.nstreams))
+        hw = HW[args.hw](args.nstreams)
+        res = simulate(sched, hw)
         spans = res.op_spans
+        analysis = TraceAnalysis.from_sim(sched, res, hw=hw).digest()
         log(f"{name}: {len(sched.ops)} ops, "
             f"simulated makespan {res.makespan*1e3:.2f} ms on {args.hw}")
     else:
@@ -213,11 +241,13 @@ def main() -> None:
                                          schedule=sched)
         spans = ex.last_spans
         total = max(e for _, _, _, e in spans)
+        analysis = TraceAnalysis.from_spans(sched, spans).digest()
         log(f"{name}: {len(spans)} ops executed in {total*1e3:.1f} ms wall")
 
     doc = chrome_trace(spans, process_name=name, reuse=sched.reuse)
     doc["otherData"] = {"h2d_bytes": sched.total_bytes(OpKind.H2D),
-                        "d2h_bytes": sched.total_bytes(OpKind.D2H)}
+                        "d2h_bytes": sched.total_bytes(OpKind.D2H),
+                        "analysis": analysis}
     _emit(doc, args)
 
 

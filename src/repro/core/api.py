@@ -153,6 +153,32 @@ def hclObservability(enable: bool = False, trace: bool = False, **kw):
     return obs
 
 
+def hclTraceAnalysis(sched: Schedule, hw=None, res=None, spans=None, **kw):
+    """Facade over :class:`repro.obs.analyze.TraceAnalysis` (DESIGN.md §11):
+    bottleneck attribution over one schedule's span timeline.
+
+        ana, res = hclTraceAnalysis(sched, hw=profile.model_for(2))
+        print(ana.digest())        # verdict + critical-path shares
+        ana.verify_reconciliation(res)   # exact accounting, or AssertionError
+
+    Three input shapes: simulate here (``hw`` an engine model or a
+    :class:`~repro.tune.calibrate.HardwareProfile`, returns
+    ``(analysis, SimResult)``), attribute an existing simulation (``res``),
+    or attribute recorded wall-clock spans (``spans``, tolerance-matched).
+    Resolved lazily: the analyzer imports the simulator."""
+    from repro.obs.analyze import TraceAnalysis
+
+    if res is not None:
+        return TraceAnalysis.from_sim(sched, res, hw=hw)
+    if spans is not None:
+        return TraceAnalysis.from_spans(sched, spans, hw=hw, **kw)
+    if hw is None:
+        raise ValueError("hclTraceAnalysis needs hw=, res= or spans=")
+    if hasattr(hw, "model_for"):       # a HardwareProfile: default 2 streams
+        hw = hw.model_for(kw.pop("nstreams", 2))
+    return TraceAnalysis.analyze(sched, hw)
+
+
 def hclAutoTuner(device: Optional[Device] = None, **kw):
     """Facade over :class:`repro.tune.AutoTuner` (DESIGN.md §6): calibrate
     the device once, then dispense cached ``TunedPlan``s — partition

@@ -342,6 +342,70 @@ def simulate_hybrid(hplan: HybridPlan) -> HybridSimResult:
         per_device=tuple(per))
 
 
+@dataclasses.dataclass
+class HybridAnalysis:
+    """Per-device bottleneck attribution for a co-executed plan.
+
+    ``imbalance`` is ``(slowest - fastest) / slowest`` over the device
+    makespans — the fraction of the critical device's time the other
+    devices sit drained; the balancer's ``tolerance`` bounds it by
+    construction.  Each device also carries its own
+    :class:`~repro.obs.analyze.TraceAnalysis`, so a lagging device's
+    verdict (transfer- vs compute-bound) says *why* it lags.
+    """
+
+    makespan: float
+    critical_device: str
+    imbalance: float
+    per_device: Tuple[Tuple[str, object], ...]    # (name, TraceAnalysis)
+
+    def device(self, name: str):
+        for n, ana in self.per_device:
+            if n == name:
+                return ana
+        raise KeyError(name)
+
+    def to_json(self) -> dict:
+        return {
+            "makespan_seconds": self.makespan,
+            "critical_device": self.critical_device,
+            "imbalance": self.imbalance,
+            "devices": {name: ana.to_json(max_path=0)
+                        for name, ana in self.per_device},
+        }
+
+
+def analyze_hybrid(hplan: HybridPlan,
+                   sim: Optional[HybridSimResult] = None) -> HybridAnalysis:
+    """Attribute a hybrid plan's predicted co-execution: one exact
+    :class:`~repro.obs.analyze.TraceAnalysis` per device (same recompiled
+    schedule + engine model as :func:`simulate_hybrid`), plus the
+    cross-device imbalance.  Publishes ``repro_analysis_*`` metrics (one
+    ``kernel=<kernel>:<device>`` series per device) when obs is enabled.
+    """
+    from repro.obs.analyze import TraceAnalysis
+
+    sim = sim or simulate_hybrid(hplan)
+    obs = get_observability()
+    per = []
+    for dp, (name, res) in zip(hplan.device_plans, sim.per_device):
+        sched = device_schedule(hplan, dp)
+        hw = dp.device.profile.model_for(dp.plan.nstreams)
+        ana = TraceAnalysis.from_sim(sched, res, hw=hw)
+        obs.record_analysis(ana, kernel=f"{hplan.kernel}:{name}")
+        per.append((name, ana))
+    spans = sim.device_makespans
+    imbalance = (max(spans) - min(spans)) / max(spans) if max(spans) else 0.0
+    critical = max(sim.per_device, key=lambda nr: nr[1].makespan)[0]
+    if obs.metrics.enabled:
+        obs.metrics.gauge(
+            "repro_analysis_hybrid_imbalance_ratio",
+            "(slowest - fastest) / slowest device makespan, last plan").set(
+                imbalance, kernel=hplan.kernel)
+    return HybridAnalysis(makespan=sim.makespan, critical_device=critical,
+                          imbalance=imbalance, per_device=tuple(per))
+
+
 # ===========================================================================
 # The composite runtime (registered tier "HYBRID")
 # ===========================================================================

@@ -42,9 +42,28 @@ from repro.obs.spans import FlatSpan, Tracer, TraceSpan
 
 __all__ = [
     "Counter", "DriftMonitor", "DriftRecord", "FlatSpan", "Gauge",
-    "Histogram", "Metric", "MetricRegistry", "Observability", "TraceSpan",
-    "Tracer", "get_observability", "key_str",
+    "Histogram", "Metric", "MetricRegistry", "Observability", "TraceAnalysis",
+    "TraceSpan", "Tracer", "WhatIfReport", "get_observability", "key_str",
+    "whatif",
 ]
+
+# Attribution lives in submodules that import repro.core (the simulator);
+# resolve lazily so ``import repro.obs`` stays core-free (the core runtime
+# imports us first).
+_LAZY = {
+    "TraceAnalysis": ("repro.obs.analyze", "TraceAnalysis"),
+    "WhatIfReport": ("repro.obs.whatif", "WhatIfReport"),
+    "whatif": ("repro.obs.whatif", "whatif"),
+}
+
+
+def __getattr__(name: str):
+    target = _LAZY.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(target[0]), target[1])
 
 
 class _NullSpan:
@@ -194,6 +213,43 @@ class Observability:
                 "last measured/predicted H2D byte ratio (must be 1.0)").set(
                     rec.byte_ratio, kernel=kernel, tier=tier)
         return rec
+
+    def record_analysis(self, analysis, kernel: str = "unknown") -> None:
+        """Publish one :class:`~repro.obs.analyze.TraceAnalysis` as the
+        ``repro_analysis_*`` metric family (duck-typed: no analyze import,
+        this package must stay core-free at load)."""
+        if not self.metrics.enabled:
+            return
+        m = self.metrics
+        m.counter("repro_analysis_runs_total",
+                  "trace attributions computed").inc(kernel=kernel)
+        m.gauge("repro_analysis_makespan_seconds",
+                "analyzed timeline makespan, last run").set(
+                    analysis.makespan, kernel=kernel)
+        m.gauge("repro_analysis_verdict_info",
+                "bottleneck verdict of the last analyzed run (value=1)").set(
+                    1, kernel=kernel, verdict=analysis.verdict)
+        for st in analysis.streams:
+            m.gauge("repro_analysis_stream_utilization",
+                    "per-stream busy fraction of the analyzed makespan").set(
+                        st.utilization, kernel=kernel, stream=str(st.stream))
+        for cls, secs in sorted(analysis.class_seconds.items()):
+            m.gauge("repro_analysis_critical_path_seconds",
+                    "critical-path seconds per segment class").set(
+                        secs, kernel=kernel, **{"class": cls})
+
+    def record_whatif(self, report, kernel: str = "unknown") -> None:
+        """Publish a :class:`~repro.obs.whatif.WhatIfReport`'s marginal
+        gains as ``repro_analysis_whatif_gain_seconds``."""
+        if not self.metrics.enabled:
+            return
+        m = self.metrics
+        for sc in report.scenarios:
+            if not sc.feasible or sc.knob == "baseline":
+                continue
+            m.gauge("repro_analysis_whatif_gain_seconds",
+                    "marginal makespan gain per scaled resource").set(
+                        sc.gain_seconds, kernel=kernel, scenario=sc.name)
 
     # -- export --------------------------------------------------------------
     def snapshot(self) -> dict:

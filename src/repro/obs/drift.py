@@ -91,6 +91,11 @@ class DriftMonitor:
         self._lock = threading.Lock()
         self._records: Deque[DriftRecord] = deque(maxlen=_MAX_RECORDS)
         self._ratios: Dict[DriftKey, Deque[float]] = {}
+        # the key's first-ever ratio: the staleness baseline.  Kept outside
+        # the rolling deque — once the window rolls, ``dq[0]`` is merely the
+        # oldest *surviving* ratio and drifts along with the trend it is
+        # supposed to detect.
+        self._first: Dict[DriftKey, float] = {}
 
     # -- recording -----------------------------------------------------------
     def record(self, kernel: str, tier: str, fingerprint: str, *,
@@ -111,6 +116,7 @@ class DriftMonitor:
             dq = self._ratios.get(rec.key)
             if dq is None:
                 dq = self._ratios[rec.key] = deque(maxlen=self.window)
+                self._first[rec.key] = rec.time_ratio
             dq.append(rec.time_ratio)
         return rec
 
@@ -132,13 +138,21 @@ class DriftMonitor:
 
     def stale(self, threshold: float = 1.25) -> List[Tuple[DriftKey, float]]:
         """Keys whose rolling ratio left ``[1/threshold, threshold]`` —
-        *relative to the key's own first recorded ratio*, so a constant
+        *relative to the key's own first-ever recorded ratio*, so a constant
         model-vs-wall scale (simulating a GPU on a CPU container) doesn't
-        flag, but a trend away from the key's own history does."""
+        flag, but a trend away from the key's own history does.
+
+        A key with a single observation is never stale: one sample has no
+        trend (its ratio IS the baseline), and using the rolling window's
+        head as the baseline would degenerate once the window rolls — the
+        oldest surviving ratio tracks the drift instead of anchoring it.
+        """
         out = []
         with self._lock:
             for key, dq in sorted(self._ratios.items()):
-                base = dq[0]
+                if len(dq) < 2:
+                    continue
+                base = self._first.get(key, dq[0])
                 cur = sum(dq) / len(dq)
                 rel = _ratio(cur, base)
                 if rel > threshold or rel < 1.0 / threshold:
@@ -154,7 +168,7 @@ class DriftMonitor:
                     "n": len(dq),
                     "mean_time_ratio": sum(dq) / len(dq),
                     "last_time_ratio": dq[-1],
-                    "first_time_ratio": dq[0],
+                    "first_time_ratio": self._first.get(key, dq[0]),
                 }
             return {
                 "records": [r.to_json() for r in self._records],
@@ -165,3 +179,4 @@ class DriftMonitor:
         with self._lock:
             self._records.clear()
             self._ratios.clear()
+            self._first.clear()

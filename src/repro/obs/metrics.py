@@ -51,11 +51,18 @@ def _fmt_value(v: float) -> str:
     return repr(float(v))
 
 
+def _escape_label_value(v: str) -> str:
+    # Prometheus text format: backslash, double quote and newline must be
+    # escaped inside label values (spaces and other bytes pass through)
+    return (v.replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
 def _fmt_labels(key: LabelKey, extra: Sequence[Tuple[str, str]] = ()) -> str:
     items = list(key) + list(extra)
     if not items:
         return ""
-    body = ",".join(f'{k}="{v}"' for k, v in items)
+    body = ",".join(f'{k}="{_escape_label_value(v)}"' for k, v in items)
     return "{" + body + "}"
 
 

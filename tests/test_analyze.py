@@ -1,0 +1,325 @@
+"""Bottleneck attribution + what-if modeling (DESIGN.md §11, ISSUE 8).
+
+The acceptance bar:
+
+  * **Exact reconciliation** — on simulate() output, the critical path
+    tiles ``[0, makespan]`` with float-equal abutment, its segment
+    durations sum to the makespan, and the attributed byte/flop totals
+    equal both ``SimResult`` and ``schedule_stats`` accounting — across
+    GEMM, SYRK, Cholesky-with-lookahead and a hybrid gpu+phi pair.
+  * **Verdicts are explanations** — a 1-stream phi-like run is
+    transfer-bound; a compute-heavy gpu run is compute-bound; eviction
+    stalls appear on the path exactly when buffers are scarce.
+  * **What-if agrees with the tuner** (claim C5) — at the paper's 8192^3
+    fp64 regime from a 1-stream baseline, "+1 stream" is the gpu's best
+    marginal resource (beats bandwidth x1.25) while on the phi-like
+    profile "+1 stream" *loses* time and bandwidth wins among the
+    stream/buffer/bandwidth knobs.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import HostOocRuntime, ScheduleExecutor
+from repro.core.partitioner import plan_gemm_partition
+from repro.core.pipeline import (compile_factor_pipeline, compile_pipeline,
+                                 factor_pipeline_spec, gemm_pipeline_spec,
+                                 schedule_stats, syrk_pipeline_spec)
+from repro.core.simulator import simulate
+from repro.hybrid import DeviceSpec
+from repro.hybrid.executor import analyze_hybrid, simulate_hybrid
+from repro.hybrid.plan import plan_hybrid_gemm
+from repro.obs import get_observability
+from repro.obs.analyze import TraceAnalysis, analyze_plan
+from repro.obs.whatif import whatif_gemm
+from repro.tune import gpu_profile, phi_profile
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    obs = get_observability()
+    obs.reset()
+    obs.disable()
+    yield obs
+    obs.reset()
+    obs.disable()
+
+
+def _gemm_sched(m=1024, bpe=4, ns=2, nb=2, budget=None, kernel="gemm"):
+    budget = budget if budget is not None else (3 * m * m * bpe) // 2
+    part = plan_gemm_partition(m, m, m, budget, bpe, nbuf=nb, nstreams=ns)
+    if kernel == "gemm":
+        spec = gemm_pipeline_spec(part, band=nb)
+    else:
+        spec = syrk_pipeline_spec(part, band=nb)
+    return compile_pipeline(spec, nstreams=ns, nbuf=nb)
+
+
+# ---------------------------------------------------------------- exactness
+@pytest.mark.parametrize("profile,ns", [(gpu_profile, 2), (phi_profile, 1)])
+def test_reconciliation_exact_gemm(profile, ns):
+    sched = _gemm_sched(ns=ns)
+    hw = profile().model_for(ns)
+    ana, res = TraceAnalysis.analyze(sched, hw)
+    out = ana.verify_reconciliation(res, stats=schedule_stats(sched))
+    assert out["critical_path_seconds"] == pytest.approx(res.makespan)
+    assert ana.exact and ana.source == "sim"
+    # the path is in time order and every segment has a known class
+    assert all(seg.cls in ("h2d", "d2h", "compute", "merge",
+                           "eviction-stall") for seg in ana.path)
+
+
+def test_reconciliation_exact_syrk():
+    sched = _gemm_sched(kernel="syrk")
+    ana, res = TraceAnalysis.analyze(sched, gpu_profile().model_for(2))
+    ana.verify_reconciliation(res, stats=schedule_stats(sched))
+
+
+def test_reconciliation_exact_cholesky_lookahead():
+    n, panel = 2048, 256
+    budget = (3 * panel * n * 4) * 2
+    spec = factor_pipeline_spec(n, panel, budget, 4,
+                                kind="cholesky", lookahead=1, nbuf=2)
+    sched = compile_factor_pipeline(spec, nstreams=2, nbuf=2)
+    ana, res = TraceAnalysis.analyze(sched, gpu_profile().model_for(2))
+    ana.verify_reconciliation(res, stats=schedule_stats(sched))
+
+
+def test_reconciliation_exact_hybrid_pair():
+    m = 1024
+    budget = (3 * m * m * 4) // 2
+    devs = [DeviceSpec("gpu0", gpu_profile(), budget),
+            DeviceSpec("phi0", phi_profile(), budget)]
+    hplan = plan_hybrid_gemm(m, m, m, devs, dtype="float32")
+    sim = simulate_hybrid(hplan)
+    ha = analyze_hybrid(hplan, sim)
+    assert ha.makespan == sim.makespan
+    assert ha.critical_device in ("gpu0", "phi0")
+    assert 0.0 <= ha.imbalance < 1.0
+    for name, ana in ha.per_device:
+        res = dict(sim.per_device)[name]
+        ana.verify_reconciliation(res)
+    # the slowest device's analysis spans the aggregate makespan
+    assert ha.device(ha.critical_device).makespan == sim.makespan
+
+
+# ----------------------------------------------------------------- verdicts
+def test_verdict_transfer_bound_phi_one_stream():
+    m = 256
+    sched = _gemm_sched(m=m, ns=1, nb=1, budget=(m * m * 4 * 3) // 2)
+    ana, res = TraceAnalysis.analyze(sched, phi_profile().model_for(1))
+    ana.verify_reconciliation(res)
+    assert ana.verdict == "transfer-bound"
+    assert ana.shares["h2d"] + ana.shares.get("d2h", 0.0) >= 0.5
+
+
+def test_verdict_compute_bound_gpu_large():
+    m = 8192
+    sched = _gemm_sched(m=m, bpe=8, ns=2, nb=2, budget=(3 * m * m * 8) // 2)
+    ana, res = TraceAnalysis.analyze(sched, gpu_profile().model_for(2))
+    ana.verify_reconciliation(res)
+    assert ana.verdict == "compute-bound"
+    assert ana.shares["compute"] >= 0.5
+
+
+def test_eviction_stalls_surface_when_buffers_scarce():
+    """With nbuf=1, landing buffers recycle immediately: H2D transfers wait
+    on eviction events and the blocking tails must be classified."""
+    sched = _gemm_sched(ns=2, nb=1)
+    ana, res = TraceAnalysis.analyze(sched, gpu_profile().model_for(2))
+    ana.verify_reconciliation(res)
+    stalls = [seg for seg in ana.path if seg.cls == "eviction-stall"]
+    assert stalls, "expected eviction-stall segments at nbuf=1"
+    assert all("holding" in seg.detail for seg in stalls)
+
+
+def test_stream_utilization_and_gaps_account_for_makespan():
+    sched = _gemm_sched()
+    ana, _ = TraceAnalysis.analyze(sched, gpu_profile().model_for(2))
+    for st in ana.streams:
+        assert st.busy_seconds + st.idle_seconds == \
+            pytest.approx(ana.makespan)
+        assert 0.0 < st.utilization <= 1.0
+    assert ana.stream_utilization().keys() == {0, 1}
+    # every reported gap is attributed to something
+    for g in ana.top_gaps(10):
+        assert g.duration > 0 and g.cause
+
+
+# ---------------------------------------------------- wall-clock span input
+def test_from_spans_wall_clock_is_tolerant():
+    rng = np.random.default_rng(0)
+    m = 256
+    A = rng.standard_normal((m, m)).astype(np.float32)
+    B = rng.standard_normal((m, m)).astype(np.float32)
+    C = np.zeros((m, m), dtype=np.float32)
+    budget = (3 * m * m * 4) // 2
+    part = plan_gemm_partition(m, m, m, budget, 4, nbuf=2, nstreams=2)
+    sched = compile_pipeline(gemm_pipeline_spec(part, band=2),
+                             nstreams=2, nbuf=2)
+    ex = ScheduleExecutor(record_spans=True)
+    HostOocRuntime(executor=ex).gemm(A, B, C, 1.0, 0.0, part,
+                                     schedule=sched)
+    ana = TraceAnalysis.from_spans(sched, ex.last_spans)
+    assert not ana.exact and ana.source == "spans"
+    # wall-clock paths still tile the timeline (idle-wait fillers allowed)
+    assert ana.path[-1].end == ana.makespan
+    for a, b in zip(ana.path, ana.path[1:]):
+        assert a.end == b.start
+    assert ana.verdict in ("transfer-bound", "compute-bound",
+                           "dependency-bound")
+
+
+def test_exact_mode_rejects_wall_spans():
+    sched = _gemm_sched(m=256, budget=(3 * 256 * 256 * 4) // 2)
+    res = simulate(sched, gpu_profile().model_for(2))
+    jittered = [(tag, s, st + 1e-7, en + 2e-7)
+                for (tag, s, st, en) in res.op_spans]
+    with pytest.raises(RuntimeError, match="no exact predecessor"):
+        TraceAnalysis(sched, jittered, tolerance=0.0)
+
+
+def test_span_schedule_mismatch_raises():
+    sched = _gemm_sched(m=256, budget=(3 * 256 * 256 * 4) // 2)
+    res = simulate(sched, gpu_profile().model_for(2))
+    with pytest.raises(ValueError, match="do not describe the same run"):
+        TraceAnalysis(sched, res.op_spans[:-1])
+    bad = [(tag + "?", s, st, en) for (tag, s, st, en) in res.op_spans]
+    with pytest.raises(ValueError, match="tag"):
+        TraceAnalysis(sched, bad)
+
+
+# ------------------------------------------------------------------ what-if
+def _c5_whatif(profile):
+    m = 8192
+    budget = (3 * m * m * 8) // 6
+    return whatif_gemm(m, m, m, budget, profile, dtype="float64",
+                       nstreams=1, nbuf=2)
+
+
+def test_whatif_gpu_second_stream_beats_bandwidth():
+    """Claim C5, gpu side: from 1 stream the tuner moves to 2 — and the
+    what-if table says why: "+1 stream" gains more than bandwidth x1.25."""
+    rep = _c5_whatif(gpu_profile())
+    plus = rep.scenario("+1 stream")
+    bw = rep.scenario("bandwidth x1.25")
+    assert plus.feasible and bw.feasible
+    assert plus.gain_seconds > bw.gain_seconds > 0
+    assert rep.best(knobs=("bandwidth", "streams", "buffers")).name \
+        == "+1 stream"
+
+
+def test_whatif_phi_bandwidth_wins_streams_lose():
+    """Claim C5, phi side: the shared-engine split efficiency makes a
+    second stream a *loss*, so among the purchasable stream/buffer/
+    bandwidth knobs more bandwidth helps most — the tuner stays at 1."""
+    rep = _c5_whatif(phi_profile())
+    assert rep.scenario("+1 stream").gain_seconds < 0
+    assert rep.best(knobs=("bandwidth", "streams", "buffers")).name \
+        == "bandwidth x1.25"
+    assert rep.scenario("bandwidth x1.25").gain_seconds > 0
+
+
+def test_whatif_report_shape_and_ranking():
+    m = 512
+    rep = whatif_gemm(m, m, m, (3 * m * m * 4) // 2, gpu_profile(),
+                      nstreams=2, nbuf=2)
+    assert rep.baseline.makespan > 0
+    names = {s.name for s in rep.scenarios}
+    assert {"baseline", "bandwidth x1.25", "flops x1.25",
+            "+1 stream", "-1 stream", "+1 buffer", "-1 buffer"} <= names
+    ranked = rep.ranked()
+    assert all(a.gain_seconds >= b.gain_seconds
+               for a, b in zip(ranked, ranked[1:]))
+    doc = rep.to_json()
+    assert doc["ranked"][0] == ranked[0].name
+
+
+def test_whatif_infeasible_scenarios_are_reported_not_raised():
+    m = 256
+    # tight budget: ±1 buffer / stream re-partitions can overflow it
+    rep = whatif_gemm(m, m, m, 290000, gpu_profile(), nstreams=1, nbuf=1)
+    assert rep.baseline.makespan > 0
+    for s in rep.scenarios:
+        if not s.feasible:
+            assert s.makespan == float("inf") and s.note
+
+
+# --------------------------------------------------------------- publication
+def test_record_analysis_and_whatif_metrics(_clean_obs):
+    obs = _clean_obs
+    obs.enable(metrics=True)
+    sched = _gemm_sched(m=512, budget=(3 * 512 * 512 * 4) // 2)
+    ana, _ = TraceAnalysis.analyze(sched, gpu_profile().model_for(2))
+    obs.record_analysis(ana, kernel="gemm")
+    m = obs.metrics
+    assert m.get("repro_analysis_runs_total").value(kernel="gemm") == 1
+    assert m.get("repro_analysis_makespan_seconds").value(
+        kernel="gemm") == ana.makespan
+    assert m.get("repro_analysis_verdict_info").value(
+        kernel="gemm", verdict=ana.verdict) == 1
+    assert m.get("repro_analysis_stream_utilization").value(
+        kernel="gemm", stream="0") == ana.streams[0].utilization
+    assert m.get("repro_analysis_critical_path_seconds") is not None
+
+    rep = whatif_gemm(512, 512, 512, (3 * 512 * 512 * 4) // 2,
+                      gpu_profile(), nstreams=2, nbuf=2)
+    obs.record_whatif(rep, kernel="gemm")
+    g = m.get("repro_analysis_whatif_gain_seconds")
+    assert g.value(kernel="gemm", scenario="bandwidth x1.25") == \
+        rep.scenario("bandwidth x1.25").gain_seconds
+
+
+def test_analyze_hybrid_publishes_imbalance(_clean_obs):
+    obs = _clean_obs
+    obs.enable(metrics=True)
+    m = 1024
+    budget = (3 * m * m * 4) // 2
+    devs = [DeviceSpec("gpu0", gpu_profile(), budget),
+            DeviceSpec("phi0", phi_profile(), budget)]
+    ha = analyze_hybrid(plan_hybrid_gemm(m, m, m, devs, dtype="float32"))
+    g = obs.metrics.get("repro_analysis_hybrid_imbalance_ratio")
+    assert g.value(kernel="gemm") == ha.imbalance
+    runs = obs.metrics.get("repro_analysis_runs_total")
+    assert runs.value(kernel="gemm:gpu0") == 1
+    assert runs.value(kernel="gemm:phi0") == 1
+
+
+# ------------------------------------------------------- plan-level helpers
+def test_analyze_plan_replays_tuned_geometry():
+    from repro.tune import AutoTuner
+
+    m = 512
+    budget = (3 * m * m * 4) // 2
+    tuner = AutoTuner(profile=gpu_profile(), fingerprint="t", max_steps=256)
+    plan = tuner.gemm_plan(m, m, m, budget)
+    ana, res = analyze_plan(plan, gpu_profile())
+    ana.verify_reconciliation(res)
+    # the analysis attributes the same prediction the tuner ranked
+    assert res.makespan == pytest.approx(plan.makespan)
+
+
+def test_hcl_facade():
+    from repro.core.api import hclTraceAnalysis
+
+    sched = _gemm_sched(m=512, budget=(3 * 512 * 512 * 4) // 2)
+    ana, res = hclTraceAnalysis(sched, hw=gpu_profile())
+    ana.verify_reconciliation(res)
+    again = hclTraceAnalysis(sched, res=res)
+    assert again.makespan == ana.makespan
+    with pytest.raises(ValueError, match="needs"):
+        hclTraceAnalysis(sched)
+
+
+def test_to_json_document_shape():
+    sched = _gemm_sched(m=512, budget=(3 * 512 * 512 * 4) // 2)
+    ana, _ = TraceAnalysis.analyze(sched, gpu_profile().model_for(2))
+    doc = ana.to_json(max_path=0)
+    assert doc["exact"] is True
+    assert set(doc["shares"]) <= {"h2d", "d2h", "compute", "merge",
+                                  "eviction-stall", "idle-wait"}
+    assert len(doc["critical_path"]) == doc["critical_path_ops"]
+    assert doc["critical_path"][0]["start"] == 0.0
+    assert doc["critical_path"][-1]["end"] == doc["makespan_seconds"]
+    assert "streams" in doc and "top_gaps" in doc
+    assert doc["n_ops"] == len(sched.ops)

@@ -336,3 +336,108 @@ def test_run_report_renders_snapshot_markdown():
     md = render_markdown(obs.snapshot())
     assert "`repro_executor_runs_total`" in md
     assert "`gemm|HBM|fp`" in md and "| 1 |" in md  # byte ratio column
+
+
+# ------------------------------------------------- ISSUE 8 satellites
+def test_stale_single_observation_never_flagged():
+    """One sample has no trend: its ratio IS the baseline."""
+    mon = DriftMonitor(window=8)
+    # wildly off-scale single observation — still not stale
+    mon.record("gemm", "HBM", "fp",
+               predicted_makespan=1.0, measured_seconds=500.0)
+    assert mon.stale(threshold=1.25) == []
+    # a second, matching observation: stable -> still not stale
+    mon.record("gemm", "HBM", "fp",
+               predicted_makespan=1.0, measured_seconds=500.0)
+    assert mon.stale(threshold=1.25) == []
+
+
+def test_stale_baseline_survives_window_roll():
+    """The staleness baseline is the key's FIRST ratio, not the oldest
+    surviving deque entry — a slow drift must still be flagged after the
+    rolling window has forgotten the early history."""
+    mon = DriftMonitor(window=4)
+    mon.record("lu", "HBM", "fp",
+               predicted_makespan=1.0, measured_seconds=1.0)   # baseline 1.0
+    # drift far past the window: the deque now only holds ~2.0 ratios
+    for ratio in (1.2, 1.5, 1.8, 2.0, 2.0, 2.0, 2.0):
+        mon.record("lu", "HBM", "fp",
+                   predicted_makespan=1.0, measured_seconds=ratio)
+    assert ("lu", "HBM", "fp") in [k for k, _ in mon.stale(threshold=1.25)]
+    snap = mon.snapshot()
+    assert snap["rolling"]["lu|HBM|fp"]["first_time_ratio"] == 1.0
+
+
+def test_prometheus_empty_histogram_family():
+    """A histogram family with no observations exposes only HELP/TYPE and
+    round-trips through the JSON snapshot."""
+    reg = MetricRegistry(enabled=True)
+    reg.histogram("repro_test_seconds", "help text")
+    text = reg.to_prometheus_text()
+    assert "# HELP repro_test_seconds help text" in text
+    assert "# TYPE repro_test_seconds histogram" in text
+    assert "repro_test_seconds_bucket" not in text
+    back = MetricRegistry.from_snapshot(reg.snapshot())
+    assert back.to_prometheus_text() == text
+
+
+def test_prometheus_label_values_escaped():
+    """Label values with spaces, quotes, backslashes and newlines must
+    survive exposition (Prometheus text format escaping rules)."""
+    reg = MetricRegistry(enabled=True)
+    reg.counter("repro_test_total").inc(
+        tag='S(a[0]) "quoted" back\\slash', note="line1\nline2")
+    text = reg.to_prometheus_text()
+    assert 'tag="S(a[0]) \\"quoted\\" back\\\\slash"' in text
+    assert 'note="line1\\nline2"' in text
+    # the raw value is untouched in the JSON snapshot
+    snap = reg.snapshot()
+    labels = snap["metrics"][0]["samples"][0]["labels"]
+    assert labels["tag"] == 'S(a[0]) "quoted" back\\slash'
+
+
+def test_from_snapshot_unknown_metric_type():
+    snap = {"metrics": [{"name": "repro_x", "type": "summary",
+                         "samples": []}]}
+    with pytest.raises(ValueError, match="unknown metric type 'summary'"):
+        MetricRegistry.from_snapshot(snap)
+
+
+def test_run_report_merges_sidecar_directory(tmp_path):
+    """--input <dir>: counters add, gauges last-win, histograms accumulate,
+    drift records concatenate across *.metrics.json sidecars."""
+    sys.path.insert(0, os.path.join(REPO, "scripts"))
+    try:
+        from run_report import merge_snapshots, render_markdown
+    finally:
+        sys.path.pop(0)
+
+    def sidecar(name, runs, gauge, wall):
+        obs = Observability()
+        obs.enable(metrics=True)
+        for _ in range(runs):
+            obs.metrics.counter("repro_executor_runs_total",
+                                "runs").inc(kernel="gemm")
+        obs.metrics.gauge("repro_drift_time_ratio").set(gauge, kernel="gemm")
+        obs.metrics.histogram("repro_executor_run_seconds").observe(
+            wall, kernel="gemm")
+        obs.record_drift("gemm", "HBM", "fp", predicted_makespan=1.0,
+                         measured_seconds=wall, predicted_h2d_bytes=8,
+                         measured_h2d_bytes=8)
+        path = tmp_path / f"{name}.metrics.json"
+        path.write_text(json.dumps(obs.snapshot()))
+        return path
+
+    a = sidecar("a", runs=2, gauge=1.5, wall=0.25)
+    b = sidecar("b", runs=3, gauge=2.5, wall=0.75)
+    snap = merge_snapshots([a, b])
+    fams = {f["name"]: f for f in snap["metrics"]}
+    assert fams["repro_executor_runs_total"]["samples"][0]["value"] == 5
+    assert fams["repro_drift_time_ratio"]["samples"][0]["value"] == 2.5
+    h = fams["repro_executor_run_seconds"]["samples"][0]
+    assert h["count"] == 2 and h["sum"] == pytest.approx(1.0)
+    assert len(snap["drift"]["records"]) == 2
+    roll = snap["drift"]["rolling"]["gemm|HBM|fp"]
+    assert roll["n"] == 2 and roll["first_time_ratio"] == 0.25
+    md = render_markdown(snap)
+    assert "## Sources" in md and str(a) in md
