@@ -18,6 +18,9 @@ Prints ``name,us_per_call,derived`` CSV:
                       hit-rate vs the naive schedule (DESIGN.md §9); rows
                       land in benchmarks/bench_reuse.json so the perf
                       trajectory tracks traffic, not just makespan
+  bench_fault       — resilience cost: simulated recovery overhead guard
+                      (<10 % at a 1 % fault rate) plus an executed pinned
+                      fault corpus recovering bitwise (DESIGN.md §12)
 
 Each module additionally runs with the process metric registry enabled
 (DESIGN.md §10) and, when it recorded anything, leaves a
@@ -51,10 +54,10 @@ def _write_sidecar(obs, mod_name: str) -> None:
 
 
 def main() -> None:
-    from benchmarks import (bench_hybrid, bench_loc, bench_overhead,
-                            bench_pipeline, bench_reuse, bench_roofline,
-                            bench_simulate, bench_transition, bench_tune,
-                            bench_validate)
+    from benchmarks import (bench_fault, bench_hybrid, bench_loc,
+                            bench_overhead, bench_pipeline, bench_reuse,
+                            bench_roofline, bench_simulate,
+                            bench_transition, bench_tune, bench_validate)
     from repro.obs import get_observability
 
     obs = get_observability()
@@ -62,7 +65,7 @@ def main() -> None:
     failures = 0
     for mod in (bench_overhead, bench_transition, bench_pipeline,
                 bench_loc, bench_roofline, bench_validate, bench_simulate,
-                bench_tune, bench_hybrid, bench_reuse):
+                bench_tune, bench_hybrid, bench_reuse, bench_fault):
         mod_name = mod.__name__.rsplit(".", 1)[-1]
         obs.reset()
         obs.enable(metrics=True)

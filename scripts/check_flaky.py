@@ -1,0 +1,98 @@
+"""Flaky-test detector: rerun a pytest selection, flag intermittent fails.
+
+A test that fails in *some* repetitions but not all is flaky — usually
+hidden cross-test state, timing sensitivity, or accidental dependence on
+iteration order.  This script runs the selection ``--reps`` times, varying
+``PYTHONHASHSEED`` per repetition (so dict/set iteration order actually
+changes between runs), parses each run's ``FAILED`` lines, and reports
+tests whose failure is not reproducible across every repetition.
+
+Exit status:
+  * tests failing in **every** rep are deterministic failures — the normal
+    test gate's job, reported here but never a flake;
+  * tests failing in **some but not all** reps are flakes: reported, and
+    the script exits 1 only under ``--strict`` (CI runs report-only so a
+    new flake is visible in the log without blocking unrelated work).
+
+Example:
+    python scripts/check_flaky.py tests/test_fault_fuzz.py
+    python scripts/check_flaky.py --reps 5 --strict tests/
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FAILED_RE = re.compile(r"^(?:FAILED|ERROR) (\S+)", re.MULTILINE)
+
+
+def run_once(selection, hashseed: str, extra_args):
+    """One pytest run of ``selection``; returns (set of failed ids, rc)."""
+    env = dict(os.environ)
+    env["PYTHONHASHSEED"] = hashseed
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in [os.path.join(REPO, "src"),
+                    env.get("PYTHONPATH", "")] if p)
+    cmd = [sys.executable, "-m", "pytest", "-q", "-rf", "-p", "no:cacheprovider",
+           *extra_args, *selection]
+    proc = subprocess.run(cmd, cwd=REPO, capture_output=True, text=True,
+                          env=env)
+    failed = set(FAILED_RE.findall(proc.stdout))
+    return failed, proc.returncode, proc.stdout
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("selection", nargs="*", default=["tests"],
+                    help="pytest files/dirs/node-ids (default: tests)")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="repetitions (default 3)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 when flaky tests are found")
+    ap.add_argument("--pytest-args", default="",
+                    help="extra args forwarded to pytest (one string)")
+    args = ap.parse_args(argv)
+    if args.reps < 2:
+        ap.error("--reps must be >= 2: flakiness needs disagreement")
+    extra = args.pytest_args.split() if args.pytest_args else []
+
+    per_rep = []
+    for rep in range(args.reps):
+        hashseed = str(1000 + rep)
+        failed, rc, out = run_once(args.selection, hashseed, extra)
+        if rc not in (0, 1):  # collection error, usage error, crash
+            print(f"rep {rep + 1}/{args.reps}: pytest exited {rc} "
+                  f"(not a test failure) — aborting")
+            print(out[-2000:])
+            return rc
+        per_rep.append(failed)
+        print(f"rep {rep + 1}/{args.reps} (PYTHONHASHSEED={hashseed}): "
+              f"{len(failed)} failed")
+
+    all_failed = set.union(*per_rep)
+    always = set.intersection(*per_rep)
+    flaky = all_failed - always
+
+    for tid in sorted(always):
+        print(f"DETERMINISTIC FAIL: {tid} (failed in all {args.reps} reps)")
+    for tid in sorted(flaky):
+        n = sum(tid in f for f in per_rep)
+        print(f"FLAKY: {tid} (failed in {n}/{args.reps} reps)")
+
+    if not all_failed:
+        print(f"ok: no failures across {args.reps} reps")
+    elif not flaky:
+        print("no flakes: every failure is deterministic "
+              "(the regular test gate covers those)")
+    if flaky and args.strict:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

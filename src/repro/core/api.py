@@ -195,3 +195,21 @@ def hclAutoTuner(device: Optional[Device] = None, **kw):
     if device is not None:
         kw.setdefault("tier", device.name.upper())
     return AutoTuner(**kw)
+
+
+def hclFaultPolicy(**kw):
+    """Facade over :class:`repro.fault.FaultPolicy` (DESIGN.md §12): the
+    recovery knobs every resilient entry point shares — transfer retry
+    count and exponential backoff, and the oom degradation ladder's depth.
+
+        pol = hclFaultPolicy(max_retries=5, backoff_base=0.02)
+        C = ooc_gemm(A, B, budget_bytes=..., faults=plan, fault_policy=pol)
+
+    Pair with a :class:`~repro.fault.FaultPlan` (deterministic, seeded,
+    schedule-addressable) passed as ``faults=`` to ``ooc_gemm`` /
+    ``ooc_syrk`` / ``ooc_cholesky`` / ``ooc_lu``, or as per-device
+    ``fault_plans=`` to ``run_hybrid_gemm`` / ``run_hybrid_syrk``.
+    Resolved lazily to keep the facade import-light."""
+    from repro.fault import FaultPolicy
+
+    return FaultPolicy(**kw)

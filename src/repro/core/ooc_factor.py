@@ -83,7 +83,8 @@ def _tuned_factor_spec(tuner, kind: str, n: int, panel: int,
 
 
 def _run_factor(A: np.ndarray, spec: FactorPipelineSpec, nstreams: int,
-                nbuf: int, validate: bool, evict: str = "lru", plan=None):
+                nbuf: int, validate: bool, evict: str = "lru", plan=None,
+                faults=None, policy=None):
     """Compile + execute the factor schedule over a copy of ``A``; returns
     (factored matrix, executor state) — LU's permutation rides in scratch.
 
@@ -102,7 +103,8 @@ def _run_factor(A: np.ndarray, spec: FactorPipelineSpec, nstreams: int,
                           trace_group=f"factor:{spec.kind}")
     state = ex.run(
         sched, operands={}, outputs={"A": out},
-        ctx={"alpha": -1.0, "beta": 1.0, "panel": spec.panel, "n": spec.n})
+        ctx={"alpha": -1.0, "beta": 1.0, "panel": spec.panel, "n": spec.n},
+        faults=faults, policy=policy)
     if obs.metrics.enabled:
         kernel = f"{spec.kind}-factor"
         obs.metrics.gauge(
@@ -125,6 +127,55 @@ def _run_factor(A: np.ndarray, spec: FactorPipelineSpec, nstreams: int,
     return out, state
 
 
+def _run_factor_resilient(A, kind, spec, nstreams, nbuf, validate, evict,
+                          plan, *, faults, policy, panel, budget_bytes, bpe,
+                          dtype, tune, tuner):
+    """:func:`_run_factor` with the oom degradation ladder (DESIGN.md §12)
+    wrapped around it: an injected (or real) device oom aborts the run,
+    after which successive ladder rungs — halve nbuf, drop lookahead,
+    halve the budget (tuned plans: budget halvings only, each re-searched)
+    — recompile through the existing planning paths until one executes.
+    The degraded re-run is fault-free: the oom occurrence was consumed by
+    the failed attempt.  Every attempted rung is recorded in
+    ``policy.degrades``."""
+    if faults is None:
+        return _run_factor(A, spec, nstreams, nbuf, validate, evict=evict,
+                           plan=plan)
+    from repro.fault.errors import OomError
+    from repro.fault.policy import FaultPolicy
+    policy = policy or FaultPolicy()
+    try:
+        return _run_factor(A, spec, nstreams, nbuf, validate, evict=evict,
+                           plan=plan, faults=faults, policy=policy)
+    except OomError:
+        obs = get_observability()
+        n = A.shape[0]
+        kernel = f"{kind}-factor"
+        for step in policy.degrade_ladder(nbuf=nbuf,
+                                          lookahead=spec.lookahead,
+                                          budget_bytes=budget_bytes,
+                                          tuned=tune == "auto"):
+            policy.degrades.append(step)
+            obs.instant(f"fault:degrade:{step.action}", kernel=kernel)
+            try:
+                if tune == "auto":
+                    spec2, ns2, nb2, ev2, plan2 = _tuned_factor_spec(
+                        tuner, kind, n, panel, step.budget_bytes, bpe,
+                        dtype)
+                else:
+                    spec2 = _plan_factor_spec(
+                        kind, n, panel, step.budget_bytes, bpe,
+                        step.lookahead, step.nbuf)
+                    ns2, nb2, ev2, plan2 = nstreams, step.nbuf, evict, None
+                result = _run_factor(A, spec2, ns2, nb2, validate,
+                                     evict=ev2, plan=plan2)
+            except ValueError:
+                continue
+            obs.record_fault_recovery(kernel, "degrade")
+            return result
+        raise
+
+
 def _check_square(A) -> int:
     n = A.shape[0]
     if A.ndim != 2 or A.shape != (n, n):
@@ -137,7 +188,8 @@ def ooc_cholesky(A, panel: int = 256, *, budget_bytes: int,
                  lookahead: int = 1, nstreams: int = 2, nbuf: int = 2,
                  evict: str = "lru", validate: bool = False,
                  devices: Optional[Sequence] = None,
-                 tolerance: Optional[float] = None) -> np.ndarray:
+                 tolerance: Optional[float] = None,
+                 faults=None, fault_policy=None) -> np.ndarray:
     """Lower-triangular Cholesky factor of SPD ``A`` (host-resident).
 
     Host backend (default): the factorization is one lookahead pipeline
@@ -164,6 +216,10 @@ def ooc_cholesky(A, panel: int = 256, *, budget_bytes: int,
     A = np.asarray(A)
     n = _check_square(A)
     if devices is not None or backend != "host":
+        if faults is not None:
+            raise ValueError("fault injection is supported on the host "
+                             "pipeline backend only (hybrid paths take "
+                             "fault_plans on run_hybrid_*)")
         return _loop_cholesky(A, panel, budget_bytes, backend, tune, tuner,
                               devices, tolerance)
     bpe = np.dtype(A.dtype).itemsize
@@ -174,8 +230,11 @@ def ooc_cholesky(A, panel: int = 256, *, budget_bytes: int,
     else:
         spec = _plan_factor_spec("cholesky", n, panel, budget_bytes, bpe,
                                  lookahead, nbuf)
-    out, _ = _run_factor(A, spec, nstreams, nbuf, validate, evict=evict,
-                         plan=plan)
+    out, _ = _run_factor_resilient(
+        A, "cholesky", spec, nstreams, nbuf, validate, evict, plan,
+        faults=faults, policy=fault_policy, panel=panel,
+        budget_bytes=budget_bytes, bpe=bpe, dtype=A.dtype, tune=tune,
+        tuner=tuner)
     return np.tril(out)
 
 
@@ -184,7 +243,8 @@ def ooc_lu(A, panel: int = 256, *, budget_bytes: int,
            lookahead: int = 1, nstreams: int = 2, nbuf: int = 2,
            evict: str = "lru", validate: bool = False,
            devices: Optional[Sequence] = None,
-           tolerance: Optional[float] = None
+           tolerance: Optional[float] = None,
+           faults=None, fault_policy=None
            ) -> Tuple[np.ndarray, np.ndarray]:
     """Right-looking LU with partial pivoting: ``A[perm] = L @ U``.
 
@@ -208,6 +268,10 @@ def ooc_lu(A, panel: int = 256, *, budget_bytes: int,
     A = np.asarray(A)
     n = _check_square(A)
     if devices is not None or backend != "host":
+        if faults is not None:
+            raise ValueError("fault injection is supported on the host "
+                             "pipeline backend only (hybrid paths take "
+                             "fault_plans on run_hybrid_*)")
         return _loop_lu(A, panel, budget_bytes, backend, tune, tuner,
                         devices, tolerance)
     bpe = np.dtype(A.dtype).itemsize
@@ -218,8 +282,11 @@ def ooc_lu(A, panel: int = 256, *, budget_bytes: int,
     else:
         spec = _plan_factor_spec("lu", n, panel, budget_bytes, bpe,
                                  lookahead, nbuf)
-    out, state = _run_factor(A, spec, nstreams, nbuf, validate, evict=evict,
-                             plan=plan)
+    out, state = _run_factor_resilient(
+        A, "lu", spec, nstreams, nbuf, validate, evict, plan,
+        faults=faults, policy=fault_policy, panel=panel,
+        budget_bytes=budget_bytes, bpe=bpe, dtype=A.dtype, tune=tune,
+        tuner=tuner)
     return out, state.scratch.get("perm", np.arange(n))
 
 

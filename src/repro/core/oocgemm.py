@@ -76,6 +76,55 @@ def _hybrid_kwargs(tolerance: Optional[float]) -> dict:
     return {} if tolerance is None else {"tolerance": tolerance}
 
 
+def _host_gemm_resilient(rt, A, B, C, alpha, beta, part, sched, *, faults,
+                         policy, tuned, tune, tuner, nstreams, nbuf,
+                         traversal, evict, budget_bytes, bpe):
+    """Host-backend GEMM under fault injection with the oom degradation
+    ladder (DESIGN.md §12): an injected oom aborts the run, then halve
+    nbuf / halve budget rungs replan + rebuild the schedule (tuned runs
+    re-search at the reduced budget) and re-execute clean.  The attempted
+    rungs are recorded in ``policy.degrades``."""
+    from repro.fault.errors import OomError
+    from repro.fault.policy import FaultPolicy
+
+    M, K = A.shape
+    N = B.shape[1]
+    policy = policy or FaultPolicy()
+    try:
+        out = rt.gemm(A, B, C, alpha, beta, part, schedule=sched,
+                      faults=faults, policy=policy)
+        _record_host_drift(tuned, rt, sched)
+        return out
+    except OomError:
+        obs = get_observability()
+        for step in policy.degrade_ladder(nbuf=nbuf, lookahead=0,
+                                          budget_bytes=budget_bytes,
+                                          tuned=tune == "auto"):
+            policy.degrades.append(step)
+            obs.instant(f"fault:degrade:{step.action}", kernel="gemm")
+            try:
+                if tune == "auto":
+                    t2 = _tuned_gemm_plan(tuner, "gemm", M, N, K,
+                                          step.budget_bytes, A.dtype)
+                    part2, ns2, nb2 = (t2.gemm_partition(), t2.nstreams,
+                                       t2.nbuf)
+                    tr2, ev2 = t2.traversal, t2.evict
+                else:
+                    part2 = plan_gemm_partition(M, N, K, step.budget_bytes,
+                                                bpe)
+                    ns2, nb2, tr2, ev2 = (nstreams, step.nbuf, traversal,
+                                          evict)
+                sched2 = plib.build_gemm_schedule(
+                    part2, nstreams=ns2, nbuf=nb2, traversal=tr2, evict=ev2)
+                # clean re-run: the oom occurrence was consumed above
+                out = rt.gemm(A, B, C, alpha, beta, part2, schedule=sched2)
+            except ValueError:
+                continue
+            obs.record_fault_recovery("gemm", "degrade")
+            return out
+        raise
+
+
 def ooc_gemm(
     A,
     B,
@@ -96,6 +145,8 @@ def ooc_gemm(
     tuner=None,
     devices: Optional[Sequence] = None,
     tolerance: Optional[float] = None,
+    faults=None,
+    fault_policy=None,
 ):
     """Compute ``alpha * A @ B + beta * C`` streaming blocks through a memory
     tier of size ``budget_bytes``.
@@ -122,9 +173,20 @@ def ooc_gemm(
     eviction policy (``"lru"``/``"belady"``) — they change which H2D
     transfers the compiler's block cache elides, never the result.  Tuned
     plans carry their own searched traversal/evict and override these.
+
+    faults / fault_policy (host backend, DESIGN.md §12): a
+    :class:`~repro.fault.FaultPlan` (or ``sched -> plan`` callable) armed
+    on the executor.  Transfer faults retry, compute faults replay; an
+    injected oom walks the degradation ladder (halve nbuf, then halve the
+    budget — tuned runs re-search at the reduced budget) and re-executes
+    clean.
     """
     if tune not in (None, "auto"):
         raise ValueError(f"unknown tune mode {tune!r}; expected None/'auto'")
+    if faults is not None and (devices is not None or backend != "host"):
+        raise ValueError("fault injection is supported on the host "
+                         "pipeline backend only (hybrid paths take "
+                         "fault_plans on run_hybrid_*)")
     if devices is not None:
         from repro.hybrid import plan_hybrid_gemm, run_hybrid_gemm
 
@@ -173,9 +235,15 @@ def ooc_gemm(
         if validate:
             validate_schedule(sched)
         rt = runtime or HostOocRuntime()
-        out = rt.gemm(A, B, C, alpha, beta, part, schedule=sched)
-        _record_host_drift(tuned, rt, sched)
-        return out
+        if faults is None:
+            out = rt.gemm(A, B, C, alpha, beta, part, schedule=sched)
+            _record_host_drift(tuned, rt, sched)
+            return out
+        return _host_gemm_resilient(
+            rt, A, B, C, alpha, beta, part, sched, faults=faults,
+            policy=fault_policy, tuned=tuned, tune=tune, tuner=tuner,
+            nstreams=nstreams, nbuf=nbuf, traversal=traversal, evict=evict,
+            budget_bytes=budget_bytes, bpe=bpe)
     if backend == "vmem":
         rt = runtime or VmemOocRuntime()
         return rt.gemm(A, B, C, alpha, beta, part)
@@ -200,6 +268,8 @@ def ooc_syrk(
     tuner=None,
     devices: Optional[Sequence] = None,
     tolerance: Optional[float] = None,
+    faults=None,
+    fault_policy=None,
 ):
     """Compute ``alpha * P @ P^T + beta * C`` out-of-core (blocked SYRK).
 
@@ -224,6 +294,10 @@ def ooc_syrk(
     """
     if tune not in (None, "auto"):
         raise ValueError(f"unknown tune mode {tune!r}; expected None/'auto'")
+    if faults is not None and (devices is not None or backend != "host"):
+        raise ValueError("fault injection is supported on the host "
+                         "pipeline backend only (hybrid paths take "
+                         "fault_plans on run_hybrid_*)")
     if devices is not None:
         from repro.hybrid import plan_hybrid_syrk, run_hybrid_syrk
 
@@ -264,7 +338,8 @@ def ooc_syrk(
         if validate:
             validate_schedule(sched)
         rt = runtime or HostOocRuntime()
-        out = rt.syrk(P, C, alpha, beta, part, schedule=sched)
+        out = rt.syrk(P, C, alpha, beta, part, schedule=sched,
+                      faults=faults, policy=fault_policy)
         _record_host_drift(tuned, rt, sched)
         return out
     # "vmem": the only other backend the top-of-function guard admits

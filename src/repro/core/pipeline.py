@@ -1289,6 +1289,29 @@ def build_vendor_schedule(
                             nstreams=1, nbuf=1, device=device)
 
 
+def op_catalog(sched: Schedule) -> list:
+    """Flat schedule-addressable op listing, one row per op in global
+    issue order — the addressing surface fault plans (``repro.fault``)
+    and debugging tools key on.  ``op`` is the index a
+    :class:`~repro.fault.FaultSpec` targets; ``kernel`` names the compute
+    / finalize handler (None for slice transfers) and ``operand`` the
+    host array a slice ref touches (None for block refs)."""
+    rows = []
+    for i, op in enumerate(sched.ops):
+        ref = op.payload
+        rows.append({
+            "op": i,
+            "kind": op.kind.name.lower(),
+            "stream": op.stream,
+            "tag": op.tag,
+            "kernel": ref.kernel if isinstance(ref, BlockRef) else None,
+            "operand": getattr(ref, "operand", None),
+            "bytes": op.bytes,
+            "flops": op.flops,
+        })
+    return rows
+
+
 def schedule_stats(sched: Schedule) -> dict:
     """Summary counters used by benchmarks and EXPERIMENTS.md."""
     return {

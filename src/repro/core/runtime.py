@@ -192,7 +192,20 @@ class ScheduleExecutor:
     ops the executor actually performed in the most recent :meth:`run` —
     the ground truth the simulator's modeled byte counts are asserted
     against (a cache-hit step has no H2D op, so skipped transfers are
-    counted by neither).
+    counted by neither).  Under fault injection these counters keep their
+    meaning (nominal bytes, once per op, always reconciling with
+    ``schedule_stats``); the *extra* traffic recovery caused is accounted
+    separately in ``last_fault_stats["replayed_h2d_bytes"]``.
+
+    ``faults=``/``policy=`` arm deterministic fault injection
+    (DESIGN.md §12): a :class:`~repro.fault.FaultPlan` (or a prepared
+    injector, or a ``sched -> plan`` callable) is consulted once per op
+    *attempt*; transient transfer errors are retried with the policy's
+    exponential backoff, compute faults are recovered by block-granular
+    replay from the written buffer's last host-consistent point, and
+    ``device_lost``/``oom`` raise immediately for the callers that own
+    those recoveries (hybrid rebalance, degrade ladders).  ``faults=None``
+    (the default) costs one branch per op.
 
     When the process :class:`~repro.obs.Observability` is enabled, every
     run publishes its aggregates (bytes, ops, flops, wall seconds,
@@ -219,6 +232,10 @@ class ScheduleExecutor:
         self.last_h2d_bytes = 0
         self.last_d2h_bytes = 0
         self.last_wall_seconds = 0.0
+        # fault-injection accounting for the most recent run (None when the
+        # run was fault-free): injected / retries / replayed_ops /
+        # replayed_h2d_bytes / backoff_seconds / recovered_{retry,replay}
+        self.last_fault_stats: Optional[Dict[str, float]] = None
 
     def _handler(self, ref: BlockRef) -> HandlerFn:
         fn = self.handlers.get(ref.kernel) or _OP_HANDLERS.get(ref.kernel)
@@ -233,14 +250,20 @@ class ScheduleExecutor:
             sched: Schedule,
             operands: Dict[str, Any],
             outputs: Dict[str, np.ndarray],
-            ctx: Optional[Dict[str, Any]] = None) -> ExecState:
+            ctx: Optional[Dict[str, Any]] = None,
+            faults=None,
+            policy=None) -> ExecState:
         st = ExecState(bufs={}, operands=operands, outputs=outputs,
                        ctx=ctx or {}, scratch={})
         # parity-buffer key -> (in-flight device block, destination slice)
         pending: Dict[Tuple[str, Hashable], Tuple[Any, SliceRef]] = {}
 
         def flush(key) -> None:
-            blk, ref = pending.pop(key)
+            # read-then-delete, NOT pop-then-write: if materializing the
+            # block or the host store raises, the entry must stay in flight
+            # so a retry re-lands it — popping first made later finalize
+            # handlers silently observe stale host state
+            blk, ref = pending[key]
             arr = np.asarray(blk)
             dest = st.outputs[ref.operand]
             if ref.transpose:
@@ -252,12 +275,190 @@ class ScheduleExecutor:
                 dest[rs:rs + rn, cs:cs + cn] = arr
             else:
                 dest[rs:rs + rn] = arr
+            del pending[key]
+
+        # ---- fault injection state (armed only when a plan is passed) ----
+        fi = faults
+        fstats: Optional[Dict[str, float]] = None
+        if fi is not None:
+            from repro.fault.errors import (ComputeFault, DeviceLostError,
+                                            OomError, TransferError)
+            from repro.fault.plan import REPLAYABLE_KERNELS
+            if callable(fi) and not hasattr(fi, "check"):
+                fi = fi(sched)            # a sched -> plan factory
+            if hasattr(fi, "injector"):   # a FaultPlan: fresh one-shot state
+                fi = fi.injector()
+            if policy is None:
+                from repro.fault.policy import FaultPolicy
+                policy = FaultPolicy()
+            fstats = {"injected": 0, "retries": 0, "replayed_ops": 0,
+                      "replayed_h2d_bytes": 0, "backoff_seconds": 0.0,
+                      "recovered_retry": 0, "recovered_replay": 0}
+            # per-buffer recovery state: the value at the last
+            # host-consistent point (H2D load / write-back dispatch) and
+            # the compute chain applied since — buffer reassignment makes
+            # these O(1) reference snapshots, not copies
+            clean: Dict[Tuple[str, Hashable], Any] = {}
+            chains: Dict[Tuple[str, Hashable], List] = {}
+
+        def flush_retrying(key) -> None:
+            # a write-back materialization can itself fail transiently;
+            # under a policy it gets the same retry treatment as an
+            # injected transfer fault (the fixed flush keeps the entry
+            # in flight across attempts)
+            if fi is None:
+                flush(key)
+                return
+            attempt = 0
+            while True:
+                try:
+                    flush(key)
+                except TransferError:
+                    attempt += 1
+                    if attempt > policy.max_retries:
+                        raise
+                    fstats["retries"] += 1
+                    delay = policy.backoff(attempt)
+                    fstats["backoff_seconds"] += delay
+                    policy.sleep(delay)
+                    continue
+                if attempt:
+                    fstats["recovered_retry"] += 1
+                return
+
+        def exec_h2d(op, ref) -> None:
+            self.last_h2d_bytes += op.bytes
+            key = op.buffers_written[0]
+            if key in pending:           # schedule's wC wait point: the
+                flush_retrying(key)      # previous occupant lands now
+            if ref.operand in st.outputs:  # host coherence on re-read
+                src_shape = st.outputs[ref.operand].shape
+                for k in [k for k, (_, pref) in pending.items()
+                          if _spans_overlap(ref, pref, src_shape)]:
+                    flush_retrying(k)
+            st.bufs[key] = jnp.asarray(_take(st.host(ref.operand), ref))
+            if fi is not None:   # fresh load = host-consistent snapshot
+                clean[key] = st.bufs[key]
+                chains[key] = []
+
+        def exec_compute(op, ref) -> None:
+            self._handler(ref)(st, op, ref)
+
+        def exec_d2h(op, ref) -> None:
+            self.last_d2h_bytes += op.bytes
+            if isinstance(ref, BlockRef):  # finalize handler
+                for key in list(pending):  # finalizers read/patch host
+                    flush_retrying(key)    # state: land in-flight blocks
+                self._handler(ref)(st, op, ref)
+                return
+            key = op.buffers_read[0]
+            if key in pending:
+                flush_retrying(key)
+            pending[key] = (st.bufs[key], ref)
+            if fi is not None:
+                # write-back boundary: compute replay restores from here,
+                # references to the earlier chain are released
+                clean[key] = st.bufs[key]
+                chains[key] = []
+            if not self.async_writeback:
+                flush_retrying(key)
+
+        def run_clean(op, ref) -> None:
+            if op.kind == OpKind.H2D:
+                exec_h2d(op, ref)
+            elif op.kind == OpKind.COMPUTE:
+                exec_compute(op, ref)
+            elif op.kind == OpKind.D2H:
+                exec_d2h(op, ref)
+
+        def run_faulted(i, op, ref) -> None:
+            attempt = 0              # faulted attempts of this op so far
+            while True:
+                cls = fi.check(i, op)
+                if cls is None:
+                    run_clean(op, ref)
+                    if op.kind == OpKind.COMPUTE:
+                        # successful compute: extend the redo chains of the
+                        # buffers it wrote, snapshotting its read buffers
+                        # so a later replay re-binds the exact inputs
+                        reads = {k: st.bufs[k] for k in op.buffers_read
+                                 if k in st.bufs}
+                        for k in op.buffers_written:
+                            if k in chains:
+                                chains[k].append((op, ref, reads))
+                    if attempt:
+                        fstats["recovered_replay"
+                               if op.kind == OpKind.COMPUTE
+                               else "recovered_retry"] += 1
+                    return
+                fstats["injected"] += 1
+                obs.instant(f"fault:{cls}", op=i, tag=op.tag,
+                            stream=op.stream)
+                if cls == "device_lost":
+                    raise DeviceLostError(
+                        f"injected device_lost at op {i} ({op.tag})")
+                if cls == "oom":
+                    raise OomError(f"injected oom at op {i} ({op.tag})")
+                attempt += 1
+                if cls == "h2d_error":
+                    if op.kind == OpKind.COMPUTE:
+                        raise ValueError(
+                            f"fault plan injects h2d_error into compute "
+                            f"op {i} ({op.tag})")
+                    if attempt > policy.max_retries:
+                        raise TransferError(
+                            f"op {i} ({op.tag}): transfer failed after "
+                            f"{policy.max_retries} retries")
+                    if op.kind == OpKind.H2D:
+                        # the failed attempt still moved the bytes: extra
+                        # traffic is recovery's, nominal counters are not
+                        fstats["replayed_h2d_bytes"] += op.bytes
+                    fstats["retries"] += 1
+                    delay = policy.backoff(attempt)
+                    fstats["backoff_seconds"] += delay
+                    policy.sleep(delay)
+                    continue
+                # compute_nan: the op runs but its output is corrupt;
+                # recover by block-granular replay — restore the written
+                # buffer's last host-consistent value and redo the chain
+                key = op.buffers_written[0] if op.buffers_written else None
+                self._handler(ref)(st, op, ref)
+                for k in op.buffers_written:
+                    if k in st.bufs:
+                        st.bufs[k] = jnp.full_like(st.bufs[k], jnp.nan)
+                replayable = (
+                    op.kind == OpKind.COMPUTE and key is not None
+                    and len(op.buffers_written) == 1 and key in clean
+                    and getattr(ref, "kernel", None) in REPLAYABLE_KERNELS)
+                if not replayable or attempt > policy.max_retries:
+                    raise ComputeFault(
+                        f"op {i} ({op.tag}): compute fault "
+                        + ("retries exhausted" if replayable
+                           else "not replayable"))
+                st.bufs[key] = clean[key]
+                for cop, cref, creads in chains[key]:
+                    saved = {}
+                    for rk, rv in creads.items():
+                        if rk in cop.buffers_written:
+                            continue
+                        saved[rk] = st.bufs.get(rk)
+                        st.bufs[rk] = rv
+                    self._handler(cref)(st, cop, cref)
+                    for rk, rv in saved.items():
+                        if rv is None:
+                            st.bufs.pop(rk, None)
+                        else:
+                            st.bufs[rk] = rv
+                fstats["replayed_ops"] += len(chains[key]) + 1
+                # loop: the next attempt re-consults the injector and
+                # either faults again (times > 1) or dispatches cleanly
 
         # stale spans from a prior run must never leak into a new trace,
         # so the reset is unconditional (not gated on record_spans)
         self.last_spans = []
         self.last_h2d_bytes = 0
         self.last_d2h_bytes = 0
+        self.last_fault_stats = None
         obs = get_observability()
         tracer = obs.tracer
         # an active tracer forces span recording: a trace is inspection
@@ -269,46 +470,34 @@ class ScheduleExecutor:
         if trace:
             t_base = t_run0
 
-        for op in sched.ops:
-            ref = op.payload
-            if trace:
-                t0 = time.perf_counter() - t_base
-            if op.kind == OpKind.H2D:
-                self.last_h2d_bytes += op.bytes
-                key = op.buffers_written[0]
-                if key in pending:       # schedule's wC wait point: the
-                    flush(key)           # previous occupant lands now
-                if ref.operand in st.outputs:  # host coherence on re-read
-                    src_shape = st.outputs[ref.operand].shape
-                    for k in [k for k, (_, pref) in pending.items()
-                              if _spans_overlap(ref, pref, src_shape)]:
-                        flush(k)
-                st.bufs[key] = jnp.asarray(_take(st.host(ref.operand), ref))
-            elif op.kind == OpKind.COMPUTE:
-                self._handler(ref)(st, op, ref)
-            elif op.kind == OpKind.D2H:
-                self.last_d2h_bytes += op.bytes
-                if isinstance(ref, BlockRef):  # finalize handler
-                    for key in list(pending):  # finalizers read/patch host
-                        flush(key)             # state: land in-flight blocks
-                    self._handler(ref)(st, op, ref)
+        try:
+            for i, op in enumerate(sched.ops):
+                ref = op.payload
+                if trace:
+                    t0 = time.perf_counter() - t_base
+                if fi is None:
+                    run_clean(op, ref)
                 else:
-                    key = op.buffers_read[0]
-                    if key in pending:
-                        flush(key)
-                    pending[key] = (st.bufs[key], ref)
-                    if not self.async_writeback:
-                        flush(key)
-            if trace:
-                sync = [st.bufs[k] for k in op.buffers_written
-                        if k in st.bufs]
-                if op.kind == OpKind.COMPUTE and "carry" in st.scratch:
-                    sync.append(st.scratch["carry"])
-                jax.block_until_ready(sync)
-                self.last_spans.append(
-                    (op.tag, op.stream, t0, time.perf_counter() - t_base))
-        for key in list(pending):
-            flush(key)
+                    run_faulted(i, op, ref)
+                if trace:
+                    sync = [st.bufs[k] for k in op.buffers_written
+                            if k in st.bufs]
+                    if op.kind == OpKind.COMPUTE and "carry" in st.scratch:
+                        sync.append(st.scratch["carry"])
+                    jax.block_until_ready(sync)
+                    self.last_spans.append(
+                        (op.tag, op.stream, t0,
+                         time.perf_counter() - t_base))
+            for key in list(pending):
+                flush_retrying(key)
+        finally:
+            if fi is not None:
+                # publish even when an unrecoverable fault propagates:
+                # the caller's degrade/rebalance handler still needs the
+                # injection record
+                self.last_fault_stats = fstats
+                obs.record_fault_run(sched.meta.get("kernel", "run"),
+                                     fstats)
         self.last_wall_seconds = time.perf_counter() - t_run0
         if obs.metrics.enabled:
             obs.record_executor_run(
@@ -464,7 +653,8 @@ class HostOocRuntime(OocRuntime):
 
     def gemm(self, A, B, C, alpha, beta, part: GemmPartition,
              nstreams: int = 2, nbuf: int = 2,
-             schedule: Optional[Schedule] = None):
+             schedule: Optional[Schedule] = None,
+             faults=None, policy=None):
         sched = schedule or plib.build_gemm_schedule(
             part, nstreams=nstreams, nbuf=nbuf
         )
@@ -474,12 +664,14 @@ class HostOocRuntime(OocRuntime):
             operands={"A": np.asarray(A), "B": np.asarray(B)},
             outputs={"C": out},
             ctx={"alpha": alpha, "beta": beta},
+            faults=faults, policy=policy,
         )
         return out
 
     def syrk(self, P, C, alpha, beta, part: GemmPartition,
              nstreams: int = 2, nbuf: int = 2,
-             schedule: Optional[Schedule] = None):
+             schedule: Optional[Schedule] = None,
+             faults=None, policy=None):
         """C = alpha * P @ P^T + beta * C via the SYRK pipeline spec (the
         Cholesky trailing update as a first-class schedule)."""
         sched = schedule or plib.build_syrk_schedule(
@@ -491,6 +683,7 @@ class HostOocRuntime(OocRuntime):
             operands={"P": np.asarray(P)},
             outputs={"C": out},
             ctx={"alpha": alpha, "beta": beta},
+            faults=faults, policy=policy,
         )
         return out
 

@@ -49,6 +49,35 @@ class HardwareModel:
         return self.per_op_overhead + op.bytes / bw
 
 
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Expected-cost inflation for ranking plans under a fault rate
+    (DESIGN.md §12).  Deterministic — no sampling — so tuner searches
+    stay reproducible: each op's duration is replaced by its expectation
+    under per-attempt fault probability ``rate``.
+
+    Transfers retry until success: the expected attempt count is the
+    geometric ``1/(1-rate)``, each failed attempt costing the transfer
+    again plus ``mean_backoff`` sleep.  Computes recover by replay; a
+    fault costs ``redo_factor`` op-durations of redone work on average
+    (:func:`repro.fault.replay.mean_redo_len` calibrates this per
+    schedule; 1.0 is the no-chain floor).
+    """
+
+    rate: float
+    mean_backoff: float = 0.0
+    redo_factor: float = 1.0
+
+    def expected_duration(self, op: Op, dur: float) -> float:
+        r = min(max(self.rate, 0.0), 0.99)
+        if r == 0.0:
+            return dur
+        if op.kind == OpKind.COMPUTE:
+            return dur * (1.0 + r * self.redo_factor)
+        retries = r / (1.0 - r)          # expected failed attempts
+        return dur + retries * (dur + self.mean_backoff)
+
+
 def gpu_like(flops: float = 1.16e12, pcie: float = 11e9) -> HardwareModel:
     """K40c-like: 2 independent copy engines + kernel engine (paper §I)."""
     return HardwareModel(
@@ -151,8 +180,15 @@ def _h2d_by_operand(sched: Schedule) -> Dict[str, int]:
     return out
 
 
-def simulate(sched: Schedule, hw: HardwareModel) -> SimResult:
+def simulate(sched: Schedule, hw: HardwareModel,
+             faults: "FaultModel" = None) -> SimResult:
     """Event-driven simulation of ``sched`` under ``hw``.
+
+    ``faults`` switches on the faulted-makespan mode: every op duration
+    becomes its expectation under the :class:`FaultModel`, so the tuner
+    can rank candidate plans by expected cost at a given fault rate
+    (``search_gemm(..., fault_rate=...)``).  ``faults=None`` is the exact
+    fault-free model cross-checked against ``simulate_reference``.
 
     Deterministic greedy: repeatedly pick, among stream-head ops whose waited
     events are recorded, the op with the earliest feasible start (ties break
@@ -228,6 +264,8 @@ def simulate(sched: Schedule, hw: HardwareModel) -> SimResult:
             heapq.heappush(ready, (start, si))
             continue
         dur = hw.duration(op)
+        if faults is not None:
+            dur = faults.expected_duration(op, dur)
         end = start + dur
         engine_free[pool][ei] = end
         stream_free[si] = end

@@ -24,7 +24,8 @@ Entry points: ``ooc_gemm(..., devices=[...])`` (also ``ooc_syrk`` /
 """
 
 from repro.hybrid.balance import (BalanceResult, DeviceSpec, balance_gemm,
-                                  balance_units, gemm_cost_fn)
+                                  balance_units, gemm_cost_fn,
+                                  surviving_devices)
 from repro.hybrid.executor import (HybridOocRuntime, HybridSimResult,
                                    device_schedule, merge_attention_partials,
                                    run_hybrid_attention, run_hybrid_gemm,
@@ -38,5 +39,5 @@ __all__ = [
     "device_schedule", "gemm_cost_fn", "merge_attention_partials",
     "plan_hybrid_attention", "plan_hybrid_gemm", "plan_hybrid_syrk",
     "run_hybrid_attention", "run_hybrid_gemm", "run_hybrid_syrk",
-    "simulate_hybrid",
+    "simulate_hybrid", "surviving_devices",
 ]

@@ -85,6 +85,22 @@ class BalanceResult:
         return tuple(i for i, s in enumerate(self.shares) if s > 0)
 
 
+def surviving_devices(devices: Sequence[DeviceSpec],
+                      lost: Sequence[str]) -> List[DeviceSpec]:
+    """The device set minus the members named in ``lost`` — the input to
+    re-balancing a failed band after a ``device_lost`` fault (DESIGN.md
+    §12).  Unknown names are authoring errors and raise, as does losing
+    every device (nothing left to rebalance onto)."""
+    names = [d.name for d in devices]
+    unknown = [n for n in lost if n not in names]
+    if unknown:
+        raise ValueError(f"lost devices {unknown} not in device set {names}")
+    survivors = [d for d in devices if d.name not in set(lost)]
+    if not survivors:
+        raise ValueError("all devices lost: no survivors to rebalance onto")
+    return survivors
+
+
 def _allocate(total: int, weights: Sequence[float], align: int) -> List[int]:
     """Split ``total`` into contiguous aligned spans proportional to
     ``weights``.  Zero-weight devices (dropped or infeasible) get exactly

@@ -38,8 +38,9 @@ from repro.core.simulator import SimResult, simulate
 from repro.core.streams import (BlockRef, Device, Op, OpKind, Schedule,
                                 validate_schedule)
 from repro.core.trace import Span, chrome_trace_groups
+from repro.fault.errors import DeviceLostError
 from repro.obs import get_observability
-from repro.hybrid.balance import DeviceSpec
+from repro.hybrid.balance import DeviceSpec, surviving_devices
 from repro.hybrid.plan import (DevicePlan, HybridPlan, _as_device_specs,
                                plan_hybrid_attention, plan_hybrid_gemm,
                                plan_hybrid_syrk)
@@ -119,17 +120,27 @@ def _run_concurrent(jobs) -> list:
 
 def _execute(hplan: HybridPlan, make_io, ctx: Dict,
              record_spans: bool,
-             validate: bool) -> Tuple[SpanGroups, Dict[str, float]]:
+             validate: bool,
+             fault_plans: Optional[Dict] = None,
+             fault_policy=None
+             ) -> Tuple[SpanGroups, Dict[str, float], List[str]]:
     """Shared driver: per device, build (operands, outputs) via ``make_io``
     and run the compiled sub-schedule on a private executor.
 
-    Returns ``(span_groups, stats)``; ``stats`` aggregates the measured
-    executor byte counters and the schedules' modeled byte totals (equal by
-    construction — the conformance tests pin it) plus per-device wall
-    seconds.  When an obs tracer is active, spans are force-recorded so
+    Returns ``(span_groups, stats, lost)``; ``stats`` aggregates the
+    measured executor byte counters and the schedules' modeled byte totals
+    (equal by construction — the conformance tests pin it) plus per-device
+    wall seconds.  When an obs tracer is active, spans are force-recorded so
     each device's pipeline lands in the trace as its own lane-group (the
     executor absorbs them under ``trace_group=device name``), and per-device
     lag is published as ``repro_hybrid_*`` metrics.
+
+    ``fault_plans`` maps device name -> FaultPlan (or schedule -> FaultPlan
+    callable); each device's executor injects and recovers independently
+    (DESIGN.md §12).  A ``device_lost`` fault kills only that device's job:
+    its name lands in ``lost`` with zeroed counters, and the caller
+    re-balances the band onto the survivors.  Other fault classes recover
+    in-executor (retry / replay) and never surface here.
     """
     obs = get_observability()
     record = record_spans or obs.tracer is not None
@@ -141,10 +152,22 @@ def _execute(hplan: HybridPlan, make_io, ctx: Dict,
         ex = ScheduleExecutor(record_spans=record,
                               trace_group=dp.device.name)
         operands, outputs = make_io(dp)
+        faults = (fault_plans or {}).get(dp.device.name)
         t0 = time.perf_counter()
-        ex.run(sched, operands=operands, outputs=outputs, ctx=ctx)
+        try:
+            ex.run(sched, operands=operands, outputs=outputs, ctx=ctx,
+                   faults=faults, policy=fault_policy)
+        except DeviceLostError:
+            obs.instant("fault:device_lost_band", kernel=hplan.kernel,
+                        device=dp.device.name)
+            return {
+                "name": dp.device.name, "lost": True, "spans": [],
+                "wall": time.perf_counter() - t0,
+                "h2d": 0, "d2h": 0, "sched_h2d": 0, "sched_d2h": 0,
+            }
         return {
             "name": dp.device.name,
+            "lost": False,
             "spans": list(ex.last_spans),
             "wall": time.perf_counter() - t0,
             "h2d": ex.last_h2d_bytes,
@@ -155,6 +178,7 @@ def _execute(hplan: HybridPlan, make_io, ctx: Dict,
 
     results = _run_concurrent([
         (lambda dp=dp: job(dp)) for dp in hplan.device_plans])
+    lost = [r["name"] for r in results if r["lost"]]
     walls = [r["wall"] for r in results]
     stats = {
         "h2d_bytes": sum(r["h2d"] for r in results),
@@ -175,7 +199,8 @@ def _execute(hplan: HybridPlan, make_io, ctx: Dict,
         m.gauge("repro_hybrid_lag_seconds",
                 "slowest-minus-fastest device wall, last hybrid run").set(
                     stats["lag_seconds"], kernel=hplan.kernel)
-    return [(r["name"], r["spans"]) for r in results], stats
+    groups = [(r["name"], r["spans"]) for r in results if not r["lost"]]
+    return groups, stats, lost
 
 
 def _record_hybrid_drift(obs, hplan: HybridPlan, wall_seconds: float,
@@ -194,14 +219,62 @@ def _record_hybrid_drift(obs, hplan: HybridPlan, wall_seconds: float,
         measured_d2h_bytes=int(stats["d2h_bytes"]))
 
 
+def _rebalance_lost_bands(kernel: str, hplan: HybridPlan,
+                          lost: List[str], out: np.ndarray, C: np.ndarray,
+                          alpha: float, beta: float, band_operands,
+                          groups: SpanGroups, *, record_spans: bool,
+                          validate: bool) -> None:
+    """Recompute every lost device's C row band on the survivors.
+
+    Recovery is exact, not approximate: the band restarts from the
+    ORIGINAL ``C[lo:hi]`` (the dead executor may have partially written
+    ``out``'s band, but ``out`` is a copy so ``C`` is pristine), and the
+    re-balanced sub-GEMM never splits K, so every C block is still one
+    full-depth dot — bitwise identical to the fault-free run regardless of
+    how the survivors' bands differ from the lost device's.  SYRK bands
+    recover through the same path with ``B = P^T`` (identical operand bits
+    into the identical dgemm kernel).  The recursive run is fault-free by
+    construction: the ``device_lost`` occurrence was consumed by the dead
+    job.  Survivors' spans gain a ``(rebalance <dead>)`` lane-group suffix.
+    """
+    obs = get_observability()
+    survivors = surviving_devices(
+        [dp.device for dp in hplan.device_plans], lost)
+    for dp in hplan.device_plans:
+        if dp.device.name not in lost:
+            continue
+        lo, hi = dp.start, dp.start + dp.length
+        a_band, b_full = band_operands(lo, hi)
+        sub = plan_hybrid_gemm(
+            dp.length, b_full.shape[1], a_band.shape[1], survivors,
+            dtype=np.dtype(a_band.dtype).name)
+        band, g2 = run_hybrid_gemm(
+            a_band, b_full, np.asarray(C)[lo:hi], alpha, beta, sub,
+            record_spans=record_spans, validate=validate)
+        out[lo:hi] = band
+        groups.extend((f"{name} (rebalance {dp.device.name})", spans)
+                      for name, spans in g2)
+        obs.record_fault_recovery(kernel, "rebalance",
+                                  device=dp.device.name)
+
+
 def run_hybrid_gemm(A, B, C, alpha: float, beta: float, hplan: HybridPlan,
                     *, record_spans: bool = False,
-                    validate: bool = False) -> Tuple[np.ndarray, SpanGroups]:
+                    validate: bool = False,
+                    fault_plans: Optional[Dict] = None,
+                    fault_policy=None) -> Tuple[np.ndarray, SpanGroups]:
     """Co-execute ``alpha * A @ B + beta * C`` per the plan's row bands.
 
     Each device streams its band of A and C plus the whole B; bands are
     disjoint views of one output array, so the merge is the writes
     themselves.  Returns ``(C_out, [(device_name, spans), ...])``.
+
+    ``fault_plans`` (device name -> FaultPlan) injects per-device faults:
+    transfer/compute faults recover inside that device's executor; a
+    ``device_lost`` fault drops the device and its band is re-balanced
+    across the survivors and recomputed exactly (DESIGN.md §12).  The
+    simulate-vs-actual drift record is skipped when a device was lost —
+    the plan's predicted makespan no longer describes what ran.
     """
     A = np.asarray(A)
     B = np.asarray(B)
@@ -221,19 +294,32 @@ def run_hybrid_gemm(A, B, C, alpha: float, beta: float, hplan: HybridPlan,
 
     obs = get_observability()
     t0 = time.perf_counter()
-    groups, stats = _execute(hplan, make_io, {"alpha": alpha, "beta": beta},
-                             record_spans, validate)
+    groups, stats, lost = _execute(
+        hplan, make_io, {"alpha": alpha, "beta": beta}, record_spans,
+        validate, fault_plans=fault_plans, fault_policy=fault_policy)
+    if lost:
+        _rebalance_lost_bands("gemm", hplan, lost, out, C, alpha, beta,
+                              lambda lo, hi: (A[lo:hi], B), groups,
+                              record_spans=record_spans, validate=validate)
     with obs.span("merge", cat="merge", kernel="gemm",
                   mode="in-place-bands"):
         pass  # disjoint C row bands: the merge is the writes themselves
-    _record_hybrid_drift(obs, hplan, time.perf_counter() - t0, stats)
+    if not lost:
+        _record_hybrid_drift(obs, hplan, time.perf_counter() - t0, stats)
     return out, groups
 
 
 def run_hybrid_syrk(P, C, alpha: float, beta: float, hplan: HybridPlan,
                     *, record_spans: bool = False,
-                    validate: bool = False) -> Tuple[np.ndarray, SpanGroups]:
-    """Co-execute ``alpha * P @ P^T + beta * C`` per the plan's row bands."""
+                    validate: bool = False,
+                    fault_plans: Optional[Dict] = None,
+                    fault_policy=None) -> Tuple[np.ndarray, SpanGroups]:
+    """Co-execute ``alpha * P @ P^T + beta * C`` per the plan's row bands.
+
+    ``fault_plans``/``fault_policy`` behave as in :func:`run_hybrid_gemm`;
+    a lost device's band re-balances as the equivalent GEMM with
+    ``B = P^T`` (same operand bits, same dgemm kernel — bitwise).
+    """
     P = np.asarray(P)
     n, K = P.shape
     if tuple(hplan.problem) != (n, n, K):
@@ -250,12 +336,19 @@ def run_hybrid_syrk(P, C, alpha: float, beta: float, hplan: HybridPlan,
 
     obs = get_observability()
     t0 = time.perf_counter()
-    groups, stats = _execute(hplan, make_io, {"alpha": alpha, "beta": beta},
-                             record_spans, validate)
+    groups, stats, lost = _execute(
+        hplan, make_io, {"alpha": alpha, "beta": beta}, record_spans,
+        validate, fault_plans=fault_plans, fault_policy=fault_policy)
+    if lost:
+        Pt = np.ascontiguousarray(P.T)
+        _rebalance_lost_bands("syrk", hplan, lost, out, C, alpha, beta,
+                              lambda lo, hi: (P[lo:hi], Pt), groups,
+                              record_spans=record_spans, validate=validate)
     with obs.span("merge", cat="merge", kernel="syrk",
                   mode="in-place-bands"):
         pass  # disjoint C row bands: the merge is the writes themselves
-    _record_hybrid_drift(obs, hplan, time.perf_counter() - t0, stats)
+    if not lost:
+        _record_hybrid_drift(obs, hplan, time.perf_counter() - t0, stats)
     return out, groups
 
 
@@ -287,8 +380,8 @@ def run_hybrid_attention(q, k_cache, v_cache, hplan: HybridPlan,
 
     obs = get_observability()
     t0 = time.perf_counter()
-    groups, stats = _execute(hplan, make_io, {"q": q}, record_spans,
-                             validate)
+    groups, stats, _ = _execute(hplan, make_io, {"q": q}, record_spans,
+                                validate)
     with obs.span("merge", cat="merge", kernel="attention",
                   mode="flash-partials",
                   n_partials=len(hplan.device_plans)):
@@ -454,7 +547,9 @@ class HybridOocRuntime(OocRuntime):
 
     def gemm(self, A, B, C, alpha: float, beta: float, part=None,
              plan: Optional[HybridPlan] = None,
-             record_spans: bool = False, **kw) -> np.ndarray:
+             record_spans: bool = False,
+             fault_plans: Optional[Dict] = None,
+             fault_policy=None, **kw) -> np.ndarray:
         A = np.asarray(A)
         B = np.asarray(B)
         plan = plan or plan_hybrid_gemm(
@@ -462,19 +557,23 @@ class HybridOocRuntime(OocRuntime):
             dtype=np.dtype(A.dtype).name, **self.plan_opts)
         self.last_plan = plan
         out, self.last_span_groups = run_hybrid_gemm(
-            A, B, C, alpha, beta, plan, record_spans=record_spans)
+            A, B, C, alpha, beta, plan, record_spans=record_spans,
+            fault_plans=fault_plans, fault_policy=fault_policy)
         return out
 
     def syrk(self, P, C, alpha: float, beta: float, part=None,
              plan: Optional[HybridPlan] = None,
-             record_spans: bool = False, **kw) -> np.ndarray:
+             record_spans: bool = False,
+             fault_plans: Optional[Dict] = None,
+             fault_policy=None, **kw) -> np.ndarray:
         P = np.asarray(P)
         plan = plan or plan_hybrid_syrk(
             P.shape[0], P.shape[1], self.devices,
             dtype=np.dtype(P.dtype).name, **self.plan_opts)
         self.last_plan = plan
         out, self.last_span_groups = run_hybrid_syrk(
-            P, C, alpha, beta, plan, record_spans=record_spans)
+            P, C, alpha, beta, plan, record_spans=record_spans,
+            fault_plans=fault_plans, fault_policy=fault_policy)
         return out
 
     def attention(self, q, k_cache, v_cache,

@@ -139,6 +139,13 @@ class Observability:
         return tr.span(name, cat=cat, **args) if tr is not None \
             else _NULL_SPAN
 
+    def instant(self, name: str, cat: str = "fault", **args) -> None:
+        """A zero-duration trace marker when tracing is active (fault
+        injections / recovery actions), else a free no-op."""
+        tr = self.tracer
+        if tr is not None:
+            tr.instant(name, cat=cat, **args)
+
     # -- per-run publication helpers ----------------------------------------
     # These keep the instrumented call sites to one guarded call each; all
     # are per-run (never per-op) so cost scales with kernel invocations.
@@ -193,6 +200,52 @@ class Observability:
                 m.gauge("repro_executor_stream_busy_seconds",
                         "recorded busy seconds per stream, last run").set(
                             b, kernel=kernel, stream=str(stream))
+
+    def record_fault_run(self, kernel: str, stats: Dict[str, float]) -> None:
+        """Publish one fault-injected executor run's recovery accounting
+        (DESIGN.md §12) — the ``repro_fault_*`` family.  Called once per
+        faulted run, including runs that end in an unrecoverable raise."""
+        if not self.metrics.enabled:
+            return
+        from repro.obs.metrics import BACKOFF_BUCKETS
+
+        m = self.metrics
+        m.counter("repro_fault_injected_total",
+                  "faults injected into executor runs").inc(
+                      stats.get("injected", 0), kernel=kernel)
+        m.counter("repro_fault_retries_total",
+                  "transfer retry attempts").inc(
+                      stats.get("retries", 0), kernel=kernel)
+        m.counter("repro_fault_replayed_ops_total",
+                  "compute ops re-executed by block-granular replay").inc(
+                      stats.get("replayed_ops", 0), kernel=kernel)
+        m.counter("repro_fault_replayed_h2d_bytes",
+                  "extra H2D traffic caused by recovery (separate from "
+                  "the nominal executor byte counters)").inc(
+                      stats.get("replayed_h2d_bytes", 0), kernel=kernel)
+        for action in ("retry", "replay"):
+            n = stats.get(f"recovered_{action}", 0)
+            if n:
+                m.counter("repro_fault_recoveries_total",
+                          "successful recovery actions").inc(
+                              n, kernel=kernel, action=action)
+        backoff = stats.get("backoff_seconds", 0.0)
+        if backoff:
+            m.histogram("repro_fault_backoff_seconds",
+                        "total backoff slept per faulted run",
+                        buckets=BACKOFF_BUCKETS).observe(backoff,
+                                                         kernel=kernel)
+
+    def record_fault_recovery(self, kernel: str, action: str,
+                              **labels) -> None:
+        """Publish one out-of-executor recovery action (``rebalance`` for
+        device_lost, ``degrade`` for oom ladders) into the same
+        ``repro_fault_recoveries_total`` family the executor uses."""
+        if not self.metrics.enabled:
+            return
+        self.metrics.counter("repro_fault_recoveries_total",
+                             "successful recovery actions").inc(
+                                 kernel=kernel, action=action, **labels)
 
     def record_drift(self, kernel: str, tier: str, fingerprint: str,
                      **kw) -> Optional[DriftRecord]:

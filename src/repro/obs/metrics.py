@@ -23,7 +23,12 @@ Design constraints (DESIGN.md §10):
 
 Naming scheme: ``repro_<layer>_<name>`` with snake_case names and
 ``_total`` / ``_bytes`` / ``_seconds`` unit suffixes, e.g.
-``repro_executor_h2d_bytes{kernel="gemm"}``.
+``repro_executor_h2d_bytes{kernel="gemm"}``.  The fault-injection /
+recovery subsystem publishes under ``repro_fault_*`` (DESIGN.md §12):
+``repro_fault_injected_total``, ``repro_fault_retries_total``,
+``repro_fault_replayed_ops_total``, ``repro_fault_replayed_h2d_bytes``,
+``repro_fault_recoveries_total{action=...}`` and the
+``repro_fault_backoff_seconds`` histogram.
 """
 
 from __future__ import annotations
@@ -38,6 +43,10 @@ LabelKey = Tuple[Tuple[str, str], ...]
 # which is the span of everything the engine times (op launch to factorization
 # wall time).
 DEFAULT_BUCKETS = (1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0, 60.0, 600.0)
+
+# Retry-backoff sleeps are much shorter than op/run durations: exponential
+# schedules starting at ~10ms, a handful of doublings.
+BACKOFF_BUCKETS = (1e-3, 5e-3, 1e-2, 5e-2, 1e-1, 0.5, 1.0, 5.0, 30.0)
 
 
 def _label_key(labels: Dict[str, str]) -> LabelKey:

@@ -136,6 +136,17 @@ class Tracer:
         stack.append(h)
         return h
 
+    def instant(self, name: str, cat: str = "instant", **args) -> None:
+        """Record a zero-duration marker at the current time — fault
+        injections and recovery actions stamp the timeline with these so
+        a trace shows *where* in the schedule the fault landed."""
+        stack = self._stack()
+        parent = stack[-1].span_id if stack else None
+        t = self.now()
+        h = _SpanHandle(self, name, cat, next(self._ids), parent,
+                        self._tid(), t, args)
+        self._record(h, t)
+
     def _close(self, h: _SpanHandle) -> None:
         end = self.now()
         stack = self._stack()

@@ -21,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Dict, Sequence, Tuple, Union
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -32,7 +32,7 @@ from repro.core.pipeline import (attention_pipeline_spec,
                                  compile_factor_pipeline, compile_pipeline,
                                  factor_pipeline_spec, gemm_pipeline_spec,
                                  syrk_pipeline_spec)
-from repro.core.simulator import simulate
+from repro.core.simulator import FaultModel, simulate
 from repro.obs import get_observability
 from repro.tune.calibrate import HardwareProfile
 from repro.tune.space import attention_search_space, gemm_search_space
@@ -165,8 +165,15 @@ def search_gemm(
                                         "zmorton"),
     evict_options: Sequence[str] = ("lru", "belady"),
     max_steps: int = 2048,
+    fault_rate: float = 0.0,
+    fault_model: Optional[FaultModel] = None,
 ) -> TunedPlan:
     """Exhaustively rank the pruned GEMM/SYRK space under ``profile``.
+
+    ``fault_rate`` (or an explicit ``fault_model``) ranks candidates by
+    *expected* makespan under the simulator's faulted mode (DESIGN.md
+    §12) — plans with more transfer ops pay proportionally more retry
+    tax, so the winner can differ from the fault-free one.
 
     Element size derives from ``dtype`` (the plan embeds both; deriving
     keeps the searched bytes and the reconstructed partition consistent).
@@ -201,6 +208,8 @@ def search_gemm(
             f"no feasible pipeline configuration for GEMM {(M, N, K)} "
             f"within {budget_bytes}B (max_steps={max_steps})")
     _count_candidates(kernel, len(space))
+    fm = fault_model if fault_model is not None else (
+        FaultModel(fault_rate) if fault_rate > 0 else None)
 
     best = None
     best_key = None
@@ -209,7 +218,8 @@ def search_gemm(
             spec_of(cand.part, write_back=cand.write_back,
                     traversal=cand.traversal, band=cand.nbuf),
             nstreams=cand.nstreams, nbuf=cand.nbuf, evict=cand.evict)
-        res = simulate(sched, profile.model_for(cand.nstreams))
+        res = simulate(sched, profile.model_for(cand.nstreams),
+                       faults=fm)
         key = _rank_key(res.makespan, cand.nstreams, cand.nbuf,
                         cand.part.bm, cand.part.bn, idx)
         if best_key is None or key < best_key:
@@ -219,7 +229,7 @@ def search_gemm(
     try:
         dpart = plan_gemm_partition(M, N, K, budget_bytes, bytes_per_el)
         dres = simulate(compile_pipeline(spec_of(dpart), nstreams=2, nbuf=2),
-                        profile.model_for(2))
+                        profile.model_for(2), faults=fm)
         baseline = dres.makespan
     except ValueError:
         baseline = float("inf")
@@ -263,8 +273,13 @@ def search_factor(
     lookahead_options: Sequence[int] = (0, 1, 2),
     evict_options: Sequence[str] = ("lru", "belady"),
     max_steps: int = 4096,
+    fault_rate: float = 0.0,
+    fault_model: Optional[FaultModel] = None,
 ) -> TunedPlan:
     """Rank whole-factorization pipelines under ``profile``.
+
+    ``fault_rate``/``fault_model`` rank by expected makespan under faults
+    exactly as in :func:`search_gemm`.
 
     A factorization's trailing shapes *shrink* every panel, so instead of
     caching one plan per trailing shape (the pre-pipeline wrapper's
@@ -288,6 +303,8 @@ def search_factor(
         panels.append(pw)
         pw //= 2
 
+    fm = fault_model if fault_model is not None else (
+        FaultModel(fault_rate) if fault_rate > 0 else None)
     best = None
     best_key = None
     baseline = None       # the hardcoded default, when rankable
@@ -308,7 +325,8 @@ def search_factor(
                                                         nbuf=nb, evict=ev)
                         if len(sched.ops) > max_steps:
                             continue
-                        res = simulate(sched, profile.model_for(ns))
+                        res = simulate(sched, profile.model_for(ns),
+                                       faults=fm)
                         # sequential default: the per-panel loop every
                         # entry point ran before lookahead existed
                         if (pw == panels[0] and ns == 2 and nb == 2

@@ -1,0 +1,234 @@
+"""Conformance fuzzing: seeded fault scenarios over every kernel (§12).
+
+The invariant under test is absolute: for every (schedule, FaultPlan)
+pair whose faults are recoverable, the recovered run is **bitwise
+identical** to the fault-free run, the nominal byte counters still
+reconcile exactly with ``schedule_stats`` (failed-attempt traffic is
+accounted separately), and every planned fault was actually consumed.
+
+50 seeds x 4 kernels = 200 deterministic cases, each exactly
+reproducible from its ``(seed, kernel)`` pair.  A divergence shrinks to
+a minimal failing ``(op, cls)`` via :func:`shrink_plan` before the
+assertion fires, so a red case names the exact injection that broke
+recovery.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.ooc_factor import ooc_cholesky, ooc_lu
+from repro.core.partitioner import plan_gemm_partition
+from repro.core.pipeline import (build_gemm_schedule, build_syrk_schedule,
+                                 schedule_stats)
+from repro.core.runtime import HostOocRuntime
+from repro.core.streams import OpKind
+from repro.fault import FaultPlan, FaultPolicy, FaultSpec
+
+N_SEEDS = 50
+SEEDS = list(range(N_SEEDS))
+RATE = 0.25          # executor-level pipelines (gemm / syrk)
+FACTOR_RATE = 0.10   # factor schedules are long; keep replay volume sane
+
+_POL = dict(sleep=lambda s: None)
+
+
+def _policy():
+    return FaultPolicy(**_POL)
+
+
+# ---------------------------------------------------------------- fixtures
+@pytest.fixture(scope="module")
+def gemm_case():
+    rng = np.random.default_rng(1000)
+    m, n, k = 128, 48, 32
+    A = rng.standard_normal((m, k))
+    B = rng.standard_normal((k, n))
+    C = rng.standard_normal((m, n))
+    part = plan_gemm_partition(m, n, k, 60_000)
+    sched = build_gemm_schedule(part, nstreams=2, nbuf=2)
+    rt = HostOocRuntime()
+    clean = rt.gemm(A, B, C, 1.0, 0.5, part, schedule=sched)
+    return dict(A=A, B=B, C=C, part=part, sched=sched, clean=clean)
+
+
+@pytest.fixture(scope="module")
+def syrk_case():
+    rng = np.random.default_rng(2000)
+    m, k = 128, 32
+    P = rng.standard_normal((m, k))
+    C = rng.standard_normal((m, m))
+    C = C + C.T
+    part = plan_gemm_partition(m, m, k, 100_000)
+    sched = build_syrk_schedule(part, nstreams=2, nbuf=2)
+    rt = HostOocRuntime()
+    clean = rt.syrk(P, C, 1.0, 0.5, part, schedule=sched)
+    return dict(P=P, C=C, part=part, sched=sched, clean=clean)
+
+
+@pytest.fixture(scope="module")
+def chol_case():
+    rng = np.random.default_rng(3000)
+    n = 128
+    A = rng.standard_normal((n, n))
+    spd = A @ A.T + n * np.eye(n)
+    budget = 4 * spd.nbytes
+    clean = ooc_cholesky(spd, panel=32, budget_bytes=budget)
+    return dict(A=spd, budget=budget, clean=clean)
+
+
+@pytest.fixture(scope="module")
+def lu_case():
+    rng = np.random.default_rng(4000)
+    n = 128
+    A = rng.standard_normal((n, n)) + n * np.eye(n)
+    budget = 4 * A.nbytes
+    clean_lu, clean_p = ooc_lu(A, panel=32, budget_bytes=budget)
+    return dict(A=A, budget=budget, clean_lu=clean_lu, clean_p=clean_p)
+
+
+# ------------------------------------------------------------ shrink helper
+def shrink_plan(plan, fails):
+    """Minimal failing sub-plan of ``plan`` under predicate ``fails``.
+
+    Tries every single-spec sub-plan first (the common case: one injection
+    breaks recovery); falls back to greedy spec removal when the failure
+    needs an interaction.  Returns a plan for which ``fails`` holds with
+    no removable spec — for a single-spec result, the exact ``(op, cls)``
+    culprit.
+    """
+    for s in plan.specs:
+        single = FaultPlan(specs=(s,), seed=plan.seed)
+        if fails(single):
+            return single
+    cur = plan
+    changed = True
+    while changed and len(cur.specs) > 1:
+        changed = False
+        for i in range(len(cur.specs)):
+            cand = FaultPlan(specs=cur.specs[:i] + cur.specs[i + 1:],
+                             seed=cur.seed)
+            if fails(cand):
+                cur = cand
+                changed = True
+                break
+    return cur
+
+
+def test_shrink_finds_single_culprit():
+    plan = FaultPlan(specs=tuple(
+        FaultSpec(op=i, cls="h2d_error") for i in range(8)))
+    got = shrink_plan(plan, lambda p: any(s.op == 5 for s in p.specs))
+    assert [(s.op, s.cls) for s in got.specs] == [(5, "h2d_error")]
+
+
+def test_shrink_preserves_interacting_pair():
+    plan = FaultPlan(specs=tuple(
+        FaultSpec(op=i, cls="h2d_error") for i in range(6)))
+
+    def fails(p):
+        ops = {s.op for s in p.specs}
+        return {1, 4} <= ops
+
+    got = shrink_plan(plan, fails)
+    assert {s.op for s in got.specs} == {1, 4}
+
+
+# ------------------------------------------------------- executor pipelines
+def _reconcile(executor, sched, injected):
+    """The byte-accounting invariant every fuzz case must satisfy."""
+    stats = schedule_stats(sched)
+    assert executor.last_h2d_bytes == stats["h2d_bytes"]
+    assert executor.last_d2h_bytes == stats["d2h_bytes"]
+    expect_replayed = sum(
+        sched.ops[i].bytes for i, cls in injected
+        if cls == "h2d_error" and sched.ops[i].kind == OpKind.H2D)
+    fs = executor.last_fault_stats
+    assert fs["replayed_h2d_bytes"] == expect_replayed
+    assert fs["injected"] == len(injected)
+
+
+def _run_gemm(case, plan):
+    rt = HostOocRuntime()
+    inj = plan.injector()
+    out = rt.gemm(case["A"], case["B"], case["C"], 1.0, 0.5, case["part"],
+                  schedule=case["sched"], faults=inj, policy=_policy())
+    return out, rt.executor, inj
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fuzz_gemm_recovers_bitwise(gemm_case, seed):
+    sched = gemm_case["sched"]
+    plan = FaultPlan.random(seed, sched, RATE)
+    out, ex, inj = _run_gemm(gemm_case, plan)
+    assert inj.exhausted()
+    _reconcile(ex, sched, inj.injected)
+    if not np.array_equal(out, gemm_case["clean"]):
+        minimal = shrink_plan(plan, lambda p: not np.array_equal(
+            _run_gemm(gemm_case, p)[0], gemm_case["clean"]))
+        pytest.fail(
+            f"seed {seed}: recovered GEMM diverged; minimal failing "
+            f"faults: {[(s.op, s.cls) for s in minimal.specs]}")
+
+
+def _run_syrk(case, plan):
+    rt = HostOocRuntime()
+    inj = plan.injector()
+    out = rt.syrk(case["P"], case["C"], 1.0, 0.5, case["part"],
+                  schedule=case["sched"], faults=inj, policy=_policy())
+    return out, rt.executor, inj
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fuzz_syrk_recovers_bitwise(syrk_case, seed):
+    sched = syrk_case["sched"]
+    plan = FaultPlan.random(seed, sched, RATE)
+    out, ex, inj = _run_syrk(syrk_case, plan)
+    assert inj.exhausted()
+    _reconcile(ex, sched, inj.injected)
+    if not np.array_equal(out, syrk_case["clean"]):
+        minimal = shrink_plan(plan, lambda p: not np.array_equal(
+            _run_syrk(syrk_case, p)[0], syrk_case["clean"]))
+        pytest.fail(
+            f"seed {seed}: recovered SYRK diverged; minimal failing "
+            f"faults: {[(s.op, s.cls) for s in minimal.specs]}")
+
+
+# -------------------------------------------------------- factor pipelines
+class _Capture:
+    """``faults=`` factory that hands the executor a prepared injector and
+    keeps it (plus the compiled schedule) for post-run reconciliation."""
+
+    def __init__(self, seed, rate):
+        self.seed = seed
+        self.rate = rate
+        self.inj = None
+        self.sched = None
+
+    def __call__(self, sched):
+        self.sched = sched
+        self.inj = FaultPlan.random(self.seed, sched, self.rate).injector()
+        return self.inj
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fuzz_cholesky_recovers_bitwise(chol_case, seed):
+    cap = _Capture(seed, FACTOR_RATE)
+    L = ooc_cholesky(chol_case["A"], panel=32,
+                     budget_bytes=chol_case["budget"],
+                     faults=cap, fault_policy=_policy())
+    assert cap.inj is not None and cap.inj.exhausted()
+    assert np.array_equal(L, chol_case["clean"]), (
+        f"seed {seed}: recovered Cholesky diverged; injected "
+        f"{cap.inj.injected}")
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fuzz_lu_recovers_bitwise(lu_case, seed):
+    cap = _Capture(seed, FACTOR_RATE)
+    LU, perm = ooc_lu(lu_case["A"], panel=32,
+                      budget_bytes=lu_case["budget"],
+                      faults=cap, fault_policy=_policy())
+    assert cap.inj is not None and cap.inj.exhausted()
+    assert np.array_equal(LU, lu_case["clean_lu"]) and \
+        np.array_equal(perm, lu_case["clean_p"]), (
+        f"seed {seed}: recovered LU diverged; injected {cap.inj.injected}")
