@@ -15,6 +15,11 @@ instrumented kernel call pays when metrics/tracing are OFF (guard branches
 in ``record_executor_run`` / ``record_drift`` / ``span``) and asserts it
 stays under 2 % of the smallest GEMM's floor time.
 
+The ``exec_plan_cache_hit`` row guards per-run dispatch setup (DESIGN.md
+§13): a cached :func:`compile_executable` hit — what every repeated
+``run()`` on the same schedule pays — must stay >= 2x faster than a cold
+plan compile.
+
 The ``analysis_cost`` row guards the attribution layer (DESIGN.md §11):
 one full :class:`~repro.obs.analyze.TraceAnalysis` — span pairing, exact
 critical-path walk, stream segmentation — over the paper-regime 8192^3
@@ -110,6 +115,40 @@ def _fault_disabled_overhead(sched, t_floor: float) -> dict:
     }
 
 
+def _exec_plan_cache_hit(sched) -> dict:
+    """Per-run cost of the ExecutablePlan cache hit (DESIGN.md §13) — the
+    steady-state dispatch setup every repeated ``run()`` pays.  Guard: the
+    cached path must beat a cold compile by >= 2x, or pre-compilation has
+    stopped amortizing."""
+    from repro.core import compile_executable
+    from repro.core.exec_plan import _CACHE_ATTR
+
+    reps = 200
+    t_cold = 0.0
+    for _ in range(reps):
+        if hasattr(sched, _CACHE_ATTR):
+            delattr(sched, _CACHE_ATTR)
+        t0 = time.perf_counter()
+        compile_executable(sched)
+        t_cold += time.perf_counter() - t0
+    t_cold /= reps
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        compile_executable(sched)
+    t_warm = (time.perf_counter() - t0) / reps
+    speedup = t_cold / t_warm
+    assert speedup >= 2.0, (
+        f"plan-cache hit only {speedup:.1f}x faster than cold compile "
+        f"(cold={t_cold*1e6:.1f}us warm={t_warm*1e6:.2f}us; guard: >=2x)")
+    return {
+        "name": "exec_plan_cache_hit",
+        "us_per_call": t_warm * 1e6,
+        "derived": f"warm={t_warm*1e6:.2f}us cold={t_cold*1e6:.1f}us "
+                   f"speedup={speedup:.0f}x ops={len(sched.ops)} "
+                   f"(guard: >=2x)",
+    }
+
+
 def _analysis_cost() -> dict:
     """Time one exact attribution of the paper-regime 8192^3 fp64 GEMM
     trace (claim C5's schedule) and guard it under 50 ms."""
@@ -144,6 +183,7 @@ def run(sizes=((512, 512, 384), (1024, 768, 512), (1536, 1024, 512))):
     rows = []
     guard_row = None
     fault_guard_row = None
+    plan_guard_row = None
     for (M, N, K) in sizes:
         A = rng.standard_normal((M, K)).astype(np.float32)
         B = rng.standard_normal((K, N)).astype(np.float32)
@@ -172,6 +212,7 @@ def run(sizes=((512, 512, 384), (1024, 768, 512), (1536, 1024, 512))):
         if guard_row is None:   # smallest size = tightest 2% budget
             guard_row = _obs_disabled_overhead(sched, t_floor)
             fault_guard_row = _fault_disabled_overhead(sched, t_floor)
+            plan_guard_row = _exec_plan_cache_hit(sched)
         rows.append({
             "name": f"overhead_host_{M}x{N}x{K}",
             "us_per_call": t_api * 1e6,
@@ -194,5 +235,7 @@ def run(sizes=((512, 512, 384), (1024, 768, 512), (1536, 1024, 512))):
         rows.append(guard_row)
     if fault_guard_row is not None:
         rows.append(fault_guard_row)
+    if plan_guard_row is not None:
+        rows.append(plan_guard_row)
     rows.append(_analysis_cost())
     return rows

@@ -75,6 +75,46 @@ def run(smoke: bool = False):
                     f"{res.utilization('in'):.2f} "
                     f"exec_util={res.utilization('exec'):.2f}"),
     })
+
+    # ---- executed overlap: the C3 claim on the real host executor ----
+    # Everything above is the engine model; this row runs the same 2-stream
+    # schedule shape through ScheduleExecutor in both modes (DESIGN.md §13)
+    # so the overlap the simulator promises is also demonstrated in wall
+    # clock.  bench_exec.py owns the hard guard; here it is reporting.
+    import time
+
+    import numpy as np
+
+    from repro.core import ScheduleExecutor
+
+    m, n, k = 1024, 1024, 768
+    rng = np.random.default_rng(0)
+    A = rng.standard_normal((m, k)).astype(np.float32)
+    B = rng.standard_normal((k, n)).astype(np.float32)
+    part_x = plan_gemm_partition(m, n, k, (m * k + k * n + m * n) * 4 // 4,
+                                 4, nbuf=2, nstreams=2)
+    sched_x = build_gemm_schedule(part_x, nstreams=2, nbuf=2)
+    walls = {}
+    for mode in ("issue_order", "concurrent"):
+        ex = ScheduleExecutor(mode=mode)
+        best = float("inf")
+        for rep in range(3):   # rep 0 warms the jit cache
+            C = np.zeros((m, n), dtype=np.float32)
+            t0 = time.perf_counter()
+            ex.run(sched_x, {"A": A, "B": B}, {"C": C},
+                   {"alpha": 1.0, "beta": 0.0})
+            if rep:
+                best = min(best, time.perf_counter() - t0)
+        walls[mode] = best
+    rows.append({
+        "name": f"c3_executed_{m}x{n}x{k}",
+        "us_per_call": walls["concurrent"] * 1e6,
+        "derived": (f"concurrent={walls['concurrent']*1e3:.0f}ms "
+                    f"serial={walls['issue_order']*1e3:.0f}ms "
+                    f"wall_speedup="
+                    f"{walls['issue_order']/walls['concurrent']:.2f}x "
+                    f"(host threads; guard lives in bench_exec)"),
+    })
     return rows
 
 

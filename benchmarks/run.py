@@ -21,6 +21,10 @@ Prints ``name,us_per_call,derived`` CSV:
   bench_fault       — resilience cost: simulated recovery overhead guard
                       (<10 % at a 1 % fault rate) plus an executed pinned
                       fault corpus recovering bitwise (DESIGN.md §12)
+  bench_exec        — concurrent executor guards: engine-overlap ratio
+                      (busy/makespan > 1.0 in mode="concurrent") and the
+                      ExecutablePlan cache's dispatch-cost reduction
+                      (DESIGN.md §13)
 
 Each module additionally runs with the process metric registry enabled
 (DESIGN.md §10) and, when it recorded anything, leaves a
@@ -54,9 +58,9 @@ def _write_sidecar(obs, mod_name: str) -> None:
 
 
 def main() -> None:
-    from benchmarks import (bench_fault, bench_hybrid, bench_loc,
-                            bench_overhead, bench_pipeline, bench_reuse,
-                            bench_roofline, bench_simulate,
+    from benchmarks import (bench_exec, bench_fault, bench_hybrid,
+                            bench_loc, bench_overhead, bench_pipeline,
+                            bench_reuse, bench_roofline, bench_simulate,
                             bench_transition, bench_tune, bench_validate)
     from repro.obs import get_observability
 
@@ -65,7 +69,8 @@ def main() -> None:
     failures = 0
     for mod in (bench_overhead, bench_transition, bench_pipeline,
                 bench_loc, bench_roofline, bench_validate, bench_simulate,
-                bench_tune, bench_hybrid, bench_reuse, bench_fault):
+                bench_tune, bench_hybrid, bench_reuse, bench_fault,
+                bench_exec):
         mod_name = mod.__name__.rsplit(".", 1)[-1]
         obs.reset()
         obs.enable(metrics=True)

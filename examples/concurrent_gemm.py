@@ -1,0 +1,77 @@
+"""Concurrent event-driven execution quickstart (DESIGN.md §13).
+
+One OOC GEMM schedule run two ways — the serial issue-order oracle and
+``mode="concurrent"`` (one worker thread per H2D/compute/D2H engine,
+``threading.Event``s mirroring the schedule's event program).  The demo
+shows the three contracts in ~40 lines:
+
+  * results are **bitwise identical** and byte counters equal
+    ``schedule_stats`` exactly in both modes;
+  * concurrent completion order is a *linear extension* of the
+    dependency order, not issue order — engines genuinely overlap;
+  * the cached :class:`ExecutablePlan` makes repeat dispatch ~free.
+
+Runs on CPU in a few seconds.
+"""
+import time
+
+import numpy as np
+
+from repro.core import (
+    ScheduleExecutor,
+    build_gemm_schedule,
+    plan_cache_stats,
+    plan_gemm_partition,
+    schedule_stats,
+)
+from repro.core.api import hclCompileExecutable
+
+rng = np.random.default_rng(0)
+M, N, K = 2048, 2048, 1024
+A = rng.standard_normal((M, K)).astype(np.float32)
+B = rng.standard_normal((K, N)).astype(np.float32)
+C = rng.standard_normal((M, N)).astype(np.float32)
+budget = (A.nbytes + B.nbytes + C.nbytes) // 4   # genuinely out-of-core
+
+part = plan_gemm_partition(M, N, K, budget, 4, nbuf=2, nstreams=2)
+sched = build_gemm_schedule(part, nstreams=2, nbuf=2)
+stats = schedule_stats(sched)
+ctx = {"alpha": 1.0, "beta": 0.5}
+
+# 1. the ExecutablePlan: handlers, engine queues and dependency edges are
+#    pre-resolved once and cached on the schedule itself.
+t0 = time.perf_counter()
+plan = hclCompileExecutable(sched)
+t_cold = time.perf_counter() - t0
+t0 = time.perf_counter()
+assert hclCompileExecutable(sched) is plan       # cache hit
+t_warm = time.perf_counter() - t0
+print(f"1. plan: {plan.n_ops} ops on {len(plan.queues)} engines, "
+      f"compile {t_cold*1e6:.0f}us -> cached {t_warm*1e6:.1f}us "
+      f"(stats: {plan_cache_stats()})")
+
+# 2. serial oracle vs concurrent: bitwise outputs, exact byte counters.
+outs = {}
+for mode in ("issue_order", "concurrent"):
+    ex = ScheduleExecutor(mode=mode, record_spans=True)
+    out = {"C": np.array(C)}
+    t0 = time.perf_counter()
+    ex.run(sched, {"A": A, "B": B}, out, ctx)
+    dt = time.perf_counter() - t0
+    assert ex.last_h2d_bytes == stats["h2d_bytes"]
+    assert ex.last_d2h_bytes == stats["d2h_bytes"]
+    busy = sum(t1 - t0 for _, _, t0, t1 in ex.last_spans)
+    wall = (max(t1 for *_, t1 in ex.last_spans)
+            - min(t0 for _, _, t0, _ in ex.last_spans))
+    outs[mode] = (out["C"], ex.last_completion_order)
+    print(f"2. {mode:<12} {dt*1e3:6.0f}ms  engine overlap "
+          f"busy/makespan = {busy/wall:.2f}x")
+assert np.array_equal(outs["issue_order"][0], outs["concurrent"][0])
+print("   bitwise identical: True")
+
+# 3. concurrent completion reorders across engines but never violates a
+#    dependency edge (asserted exhaustively in tests/test_exec_concurrent).
+order = outs["concurrent"][1]
+moved = sum(1 for pos, i in enumerate(order) if pos != i)
+print(f"3. completion order: {moved}/{len(order)} ops completed out of "
+      f"issue order — a linear extension of the dependency order")

@@ -43,6 +43,11 @@ from repro.core.pipeline import (
     syrk_pipeline_spec,
     vendor_pipeline_spec,
 )
+from repro.core.exec_plan import (
+    ExecutablePlan,
+    compile_executable,
+    plan_cache_stats,
+)
 from repro.core.runtime import (
     ExecState,
     HostOocRuntime,
@@ -87,17 +92,19 @@ from repro.core.streams import (
 __all__ = [
     "AttentionPartition", "BlockCache", "BlockRef", "ComputeStage",
     "Device", "EVICT_POLICIES", "Event",
-    "ExecState", "FactorPipelineSpec", "GemmPartition", "HardwareModel",
+    "ExecState", "ExecutablePlan", "FactorPipelineSpec", "GemmPartition",
+    "HardwareModel",
     "HostOocRuntime", "MeshOocRuntime", "Op", "OpKind", "OocRuntime",
     "PipelineSpec", "RuntimeFactory", "Schedule", "ScheduleError",
     "ScheduleExecutor", "SimResult", "SliceRef", "Stream", "StreamFactory",
     "StreamedOperand", "TRAVERSALS", "VmemOocRuntime", "WriteBack",
     "attention_pipeline_spec", "build_attention_schedule",
     "build_gemm_schedule", "build_syrk_schedule", "build_vendor_schedule",
-    "chrome_trace", "chrome_trace_groups", "compile_factor_pipeline",
-    "compile_pipeline", "factor_pipeline_spec", "gemm_pipeline_spec",
-    "gpu_like", "is_in_core", "ooc_attention", "ooc_cholesky", "ooc_gemm",
-    "ooc_lu", "ooc_syrk", "phi_like", "plan_attention_partition",
+    "chrome_trace", "chrome_trace_groups", "compile_executable",
+    "compile_factor_pipeline", "compile_pipeline", "factor_pipeline_spec",
+    "gemm_pipeline_spec", "gpu_like", "is_in_core", "ooc_attention",
+    "ooc_cholesky", "ooc_gemm", "ooc_lu", "ooc_syrk", "phi_like",
+    "plan_cache_stats", "plan_attention_partition",
     "plan_for_device", "plan_gemm_partition", "register_op_handler",
     "register_runtime", "schedule_stats", "simulate", "simulate_reference",
     "syrk_pipeline_spec", "tpu_v5e_ici", "tpu_v5e_vmem", "traversal_order",

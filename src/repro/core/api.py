@@ -15,6 +15,7 @@ from typing import List, Optional
 
 from jax.sharding import Mesh
 
+from repro.core.exec_plan import ExecutablePlan, compile_executable
 from repro.core.partitioner import GemmPartition, plan_gemm_partition
 from repro.core.pipeline import PipelineSpec, compile_pipeline
 from repro.core.runtime import (
@@ -83,10 +84,19 @@ def hclCompilePipeline(spec: PipelineSpec, nstreams: int = 2,
 
 class hclScheduleExecutor(ScheduleExecutor):
     """Facade alias: the single schedule interpreter (DESIGN.md §4), with
-    ``register_op_handler`` as the kernel extension point."""
+    ``register_op_handler`` as the kernel extension point and
+    ``mode="concurrent"`` selecting the per-engine worker-thread runner
+    (DESIGN.md §13)."""
 
 
 hclRegisterOpHandler = register_op_handler
+
+
+def hclCompileExecutable(sched: Schedule) -> ExecutablePlan:
+    """Compile (or fetch the cached) :class:`ExecutablePlan` for a schedule
+    — pre-resolved handlers, per-engine queues, dependency edges
+    (DESIGN.md §13)."""
+    return compile_executable(sched)
 
 
 def hclHybridRuntime(devices, **kw):

@@ -26,6 +26,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import importlib
+import threading
 import time
 from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple, Type
 
@@ -34,9 +35,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import exec_plan as _xplan
 from repro.core import pipeline as plib
+from repro.core.exec_plan import ExecutablePlan, compile_executable
 from repro.core.partitioner import GemmPartition, plan_gemm_partition
-from repro.core.streams import BlockRef, Device, Op, OpKind, Schedule, SliceRef
+from repro.core.streams import (BlockRef, Device, Op, OpKind, Schedule,
+                                ScheduleError, SliceRef)
 from repro.obs import get_observability
 
 
@@ -107,6 +111,15 @@ def _block_dgemm(a, b, c, alpha, beta, transpose: bool = False):
 # ===========================================================================
 HandlerFn = Callable[["ExecState", Op, BlockRef], None]
 _OP_HANDLERS: Dict[str, HandlerFn] = {}
+# bumped on every registration: compiled ExecutablePlans pin the version
+# they resolved handlers against, so late registrations invalidate cached
+# plans instead of serving stale (or missing) resolutions
+_HANDLERS_VERSION = 0
+
+
+def handlers_version() -> int:
+    """Monotonic handler-registry version (plan-cache invalidation key)."""
+    return _HANDLERS_VERSION
 
 
 def register_op_handler(kernel: str) -> Callable[[HandlerFn], HandlerFn]:
@@ -120,7 +133,9 @@ def register_op_handler(kernel: str) -> Callable[[HandlerFn], HandlerFn]:
     """
 
     def deco(fn: HandlerFn) -> HandlerFn:
+        global _HANDLERS_VERSION
         _OP_HANDLERS[kernel] = fn
+        _HANDLERS_VERSION += 1
         return fn
 
     return deco
@@ -170,23 +185,58 @@ class ScheduleExecutor:
     :class:`SliceRef` payload into a parity buffer, COMPUTE dispatches the
     :class:`BlockRef` payload through the handler registry, D2H writes a
     parity buffer back into the destination slice (or dispatches a finalize
-    handler).  Ops run in global issue order: on a single-stream-per-device
-    backend (XLA CPU/TPU enqueue) issue order + data deps realize the event
-    program; cross-stream reordering freedom only adds overlap on hardware
-    with parallel engines.
+    handler).  Every run first compiles (or fetches from the per-schedule
+    cache) an :class:`~repro.core.exec_plan.ExecutablePlan` — pre-resolved
+    handlers, engine queues, dependency edges — so repeated runs skip all
+    per-op string/dict work.
+
+    ``mode`` selects the run loop (DESIGN.md §13):
+
+      * ``"issue_order"`` (default) — the serial interpreter: ops run in
+        global issue order on the calling thread.  Issue order + data deps
+        realize the event program (it is a proven linear extension of the
+        dependency order); real overlap is whatever XLA's async dispatch
+        gives us.  This path is the differential oracle the concurrent
+        mode is asserted bitwise-identical against, and the fallback
+        whenever ``faults=`` is armed (fault injection is not ported yet).
+      * ``"concurrent"`` — the event-driven runner: one worker thread per
+        engine (H2D copy, D2H copy, one kernel engine per stream — the
+        same engine split the simulator models) consumes its per-engine
+        FIFO queue and blocks on ``threading.Event``s mirroring the
+        schedule's event program, so host wall-clock genuinely overlaps
+        transfers and compute.  Deadlock-free by construction: issue order
+        is a linear extension of the dependency order, and each engine
+        walks its queue in issue order, so the earliest unfinished op's
+        predecessors are always completable.  ``last_completion_order``
+        records the order ops finished (itself a linear extension — the
+        conformance tests pin it).
 
     ``async_writeback=True`` is the double-buffered mode mirroring the event
     program on real hardware: a D2H only *dispatches* (the device block stays
     in flight) and materializes when its parity buffer is about to be
     overwritten — i.e. the host blocks on block ``idx``'s compute only after
     block ``idx+1``'s transfers were issued, exactly the paper's overlap.
+    (Concurrent mode instead lands each D2H synchronously *on the D2H
+    worker* — blocking an engine thread, not the pipeline, which is what a
+    real copy engine does.)
 
     ``record_spans=True`` timestamps every op into ``last_spans`` as
     ``(tag, stream, start_s, end_s)`` — the same span shape the simulator
     emits, so :func:`repro.core.trace.chrome_trace` renders either source.
-    Recording synchronizes each op's written buffers (JAX dispatch is async),
-    so it serializes the pipeline: use it to *inspect* schedules, not to
-    benchmark them.
+    In ``"issue_order"`` mode recording synchronizes each op's written
+    buffers (JAX dispatch is async), so it serializes the pipeline: use it
+    to *inspect* schedules, not to benchmark them.  In ``"concurrent"``
+    mode each engine worker stamps its own ops against one shared
+    ``perf_counter`` base and only synchronizes the buffers *it* wrote, so
+    recording does not serialize the pipeline — spans feed
+    ``TraceAnalysis.from_spans`` (wall-clock mode).  Residual skew remains:
+    a span's end is when the op's outputs were observed ready on its engine
+    thread, which can trail the device-side completion by the worker's
+    scheduling latency, and H2D/D2H spans include host slice/copy time the
+    simulator models as pure bus time.  Cross-engine ordering of recorded
+    spans is therefore reliable only through the event edges, not through
+    raw timestamp comparison — which is exactly the tolerance
+    ``TraceAnalysis.from_spans`` applies.
 
     ``last_h2d_bytes``/``last_d2h_bytes`` count the bytes of the transfer
     ops the executor actually performed in the most recent :meth:`run` —
@@ -216,19 +266,31 @@ class ScheduleExecutor:
     branch per run.
     """
 
+    MODES = ("issue_order", "concurrent")
+
     def __init__(self,
                  handlers: Optional[Dict[str, HandlerFn]] = None,
                  async_writeback: bool = True,
                  record_spans: bool = False,
-                 trace_group: Optional[str] = None):
+                 trace_group: Optional[str] = None,
+                 mode: str = "issue_order"):
+        if mode not in self.MODES:
+            raise ValueError(
+                f"unknown executor mode {mode!r}; expected one of "
+                f"{self.MODES}")
         self.handlers = dict(handlers) if handlers else {}
         self.async_writeback = async_writeback
         self.record_spans = record_spans
+        self.mode = mode
         # lane-group name used when recorded spans are absorbed into an
         # active obs tracer (the hybrid co-scheduler names executors after
         # their device); None derives one from the schedule's kernel meta
         self.trace_group = trace_group
         self.last_spans: List[Tuple[str, int, float, float]] = []
+        # issue indices in the order ops completed in the most recent run
+        # (serial: identical to issue order; concurrent: a linear extension
+        # of the dependency order — the conformance tests pin it)
+        self.last_completion_order: List[int] = []
         self.last_h2d_bytes = 0
         self.last_d2h_bytes = 0
         self.last_wall_seconds = 0.0
@@ -255,6 +317,30 @@ class ScheduleExecutor:
             policy=None) -> ExecState:
         st = ExecState(bufs={}, operands=operands, outputs=outputs,
                        ctx=ctx or {}, scratch={})
+        # compile (or fetch the cached) ExecutablePlan: pre-resolved
+        # handlers + engine queues + dependency edges.  A hand-built
+        # schedule with a broken event graph can still run serially (the
+        # serial loop never consults the edges), so compile failures only
+        # propagate when the concurrent runner actually needs the plan.
+        try:
+            plan: Optional[ExecutablePlan] = compile_executable(sched)
+        except ScheduleError:
+            if self.mode == "concurrent":
+                raise
+            plan = None
+        resolved = plan.resolved if plan is not None else None
+
+        def handler_for(i: int, ref: BlockRef) -> HandlerFn:
+            if self.handlers:
+                fn = self.handlers.get(ref.kernel)
+                if fn is not None:
+                    return fn
+            if resolved is not None:
+                fn = resolved[i]
+                if fn is not None:
+                    return fn
+            return self._handler(ref)
+
         # parity-buffer key -> (in-flight device block, destination slice)
         pending: Dict[Tuple[str, Hashable], Tuple[Any, SliceRef]] = {}
 
@@ -341,15 +427,15 @@ class ScheduleExecutor:
                 clean[key] = st.bufs[key]
                 chains[key] = []
 
-        def exec_compute(op, ref) -> None:
-            self._handler(ref)(st, op, ref)
+        def exec_compute(i, op, ref) -> None:
+            handler_for(i, ref)(st, op, ref)
 
-        def exec_d2h(op, ref) -> None:
+        def exec_d2h(i, op, ref) -> None:
             self.last_d2h_bytes += op.bytes
             if isinstance(ref, BlockRef):  # finalize handler
                 for key in list(pending):  # finalizers read/patch host
                     flush_retrying(key)    # state: land in-flight blocks
-                self._handler(ref)(st, op, ref)
+                handler_for(i, ref)(st, op, ref)
                 return
             key = op.buffers_read[0]
             if key in pending:
@@ -363,20 +449,20 @@ class ScheduleExecutor:
             if not self.async_writeback:
                 flush_retrying(key)
 
-        def run_clean(op, ref) -> None:
+        def run_clean(i, op, ref) -> None:
             if op.kind == OpKind.H2D:
                 exec_h2d(op, ref)
             elif op.kind == OpKind.COMPUTE:
-                exec_compute(op, ref)
+                exec_compute(i, op, ref)
             elif op.kind == OpKind.D2H:
-                exec_d2h(op, ref)
+                exec_d2h(i, op, ref)
 
         def run_faulted(i, op, ref) -> None:
             attempt = 0              # faulted attempts of this op so far
             while True:
                 cls = fi.check(i, op)
                 if cls is None:
-                    run_clean(op, ref)
+                    run_clean(i, op, ref)
                     if op.kind == OpKind.COMPUTE:
                         # successful compute: extend the redo chains of the
                         # buffers it wrote, snapshotting its read buffers
@@ -456,6 +542,7 @@ class ScheduleExecutor:
         # stale spans from a prior run must never leak into a new trace,
         # so the reset is unconditional (not gated on record_spans)
         self.last_spans = []
+        self.last_completion_order = []
         self.last_h2d_bytes = 0
         self.last_d2h_bytes = 0
         self.last_fault_stats = None
@@ -470,26 +557,36 @@ class ScheduleExecutor:
         if trace:
             t_base = t_run0
 
+        # fault injection is not ported to the worker-thread runner yet:
+        # an armed plan falls back to the serial oracle (same results,
+        # same recovery semantics, no overlap)
+        concurrent = self.mode == "concurrent" and fi is None
+
         try:
-            for i, op in enumerate(sched.ops):
-                ref = op.payload
-                if trace:
-                    t0 = time.perf_counter() - t_base
-                if fi is None:
-                    run_clean(op, ref)
-                else:
-                    run_faulted(i, op, ref)
-                if trace:
-                    sync = [st.bufs[k] for k in op.buffers_written
-                            if k in st.bufs]
-                    if op.kind == OpKind.COMPUTE and "carry" in st.scratch:
-                        sync.append(st.scratch["carry"])
-                    jax.block_until_ready(sync)
-                    self.last_spans.append(
-                        (op.tag, op.stream, t0,
-                         time.perf_counter() - t_base))
-            for key in list(pending):
-                flush_retrying(key)
+            if concurrent:
+                self._run_concurrent(plan, st, trace, t_run0)
+            else:
+                for i, op in enumerate(sched.ops):
+                    ref = op.payload
+                    if trace:
+                        t0 = time.perf_counter() - t_base
+                    if fi is None:
+                        run_clean(i, op, ref)
+                    else:
+                        run_faulted(i, op, ref)
+                    if trace:
+                        sync = [st.bufs[k] for k in op.buffers_written
+                                if k in st.bufs]
+                        if op.kind == OpKind.COMPUTE \
+                                and "carry" in st.scratch:
+                            sync.append(st.scratch["carry"])
+                        jax.block_until_ready(sync)
+                        self.last_spans.append(
+                            (op.tag, op.stream, t0,
+                             time.perf_counter() - t_base))
+                    self.last_completion_order.append(i)
+                for key in list(pending):
+                    flush_retrying(key)
         finally:
             if fi is not None:
                 # publish even when an unrecoverable fault propagates:
@@ -511,6 +608,132 @@ class ScheduleExecutor:
                 self.last_spans, offset=run_offset,
                 reuse=sched.reuse or None)
         return st
+
+    def _run_concurrent(self, plan: ExecutablePlan, st: ExecState,
+                        trace: bool, t_base: float) -> None:
+        """Event-driven run loop: one worker thread per engine.
+
+        Each worker walks its engine's FIFO queue in issue order; before
+        dispatching op ``i`` it waits the ``threading.Event`` of every
+        cross-engine predecessor in ``plan.preds[i]`` (same-engine edges
+        are implied by the queue walk) and sets ``done[i]`` after the op
+        completed *on this engine* — H2D after the device put was issued,
+        D2H after the block landed in host memory, COMPUTE after the
+        handler dispatched.  This mirrors the simulator's event program:
+        engines block, the host never does.
+
+        Failure: the first raising worker records its error, sets ``stop``
+        and force-sets every ``done`` event so blocked peers wake, observe
+        ``stop`` (set strictly before the force-set, so any waiter woken
+        by it reads stop=True) and drain without dispatching further ops.
+        The lowest-issue-index error is re-raised on the calling thread.
+        """
+        ops = plan.ops
+        done = [threading.Event() for _ in range(plan.n_ops)]
+        stop = threading.Event()
+        errors: List[Tuple[int, BaseException]] = []
+        err_lock = threading.Lock()
+        completion: List[int] = []   # list.append is atomic under the GIL
+        n_eng = len(plan.queues)
+        eng_h2d = [0] * n_eng
+        eng_d2h = [0] * n_eng
+        eng_spans: List[List[Tuple[str, int, float, float]]] = \
+            [[] for _ in range(n_eng)]
+        handlers = self.handlers
+        resolved = plan.resolved
+
+        def handler_at(i: int, ref: BlockRef) -> HandlerFn:
+            if handlers:
+                fn = handlers.get(ref.kernel)
+                if fn is not None:
+                    return fn
+            fn = resolved[i]
+            return fn if fn is not None else self._handler(ref)
+
+        def land(blk: Any, ref: SliceRef) -> None:
+            # synchronous D2H: np.asarray blocks this worker (the "copy
+            # engine") until the device value is ready, then stores it —
+            # the concurrent analogue of the serial pending-flush
+            arr = np.asarray(blk)
+            dest = st.outputs[ref.operand]
+            if ref.transpose:
+                arr = arr.T
+            rs, rn = ref.rows if ref.rows is not None else (0, dest.shape[0])
+            if dest.ndim > 1:
+                cs, cn = ref.cols if ref.cols is not None \
+                    else (0, dest.shape[1])
+                dest[rs:rs + rn, cs:cs + cn] = arr
+            else:
+                dest[rs:rs + rn] = arr
+
+        def dispatch(e: int, i: int, op: Op) -> None:
+            ref = op.payload
+            kind = plan.kinds[i]
+            if kind == _xplan.KIND_H2D:
+                eng_h2d[e] += op.bytes
+                st.bufs[op.buffers_written[0]] = jnp.asarray(
+                    _take(st.host(ref.operand), ref))
+            elif kind == _xplan.KIND_COMPUTE:
+                handler_at(i, ref)(st, op, ref)
+            else:  # D2H
+                eng_d2h[e] += op.bytes
+                if isinstance(ref, BlockRef):   # finalize handler
+                    handler_at(i, ref)(st, op, ref)
+                else:
+                    land(st.bufs[op.buffers_read[0]], ref)
+
+        def worker(e: int) -> None:
+            spans = eng_spans[e]
+            for i in plan.queues[e]:
+                for p in plan.preds[i]:
+                    done[p].wait()
+                if stop.is_set():
+                    return
+                op = ops[i]
+                if trace:
+                    t0 = time.perf_counter() - t_base
+                try:
+                    dispatch(e, i, op)
+                    if trace:
+                        # per-engine clock: synchronize only the buffers
+                        # THIS op wrote — other engines keep running
+                        sync = [st.bufs[k] for k in op.buffers_written
+                                if k in st.bufs]
+                        if plan.kinds[i] == _xplan.KIND_COMPUTE \
+                                and "carry" in st.scratch:
+                            sync.append(st.scratch["carry"])
+                        jax.block_until_ready(sync)
+                except BaseException as exc:
+                    with err_lock:
+                        errors.append((i, exc))
+                    stop.set()
+                    for d in done:
+                        d.set()
+                    return
+                if trace:
+                    spans.append((op.tag, op.stream, t0,
+                                  time.perf_counter() - t_base))
+                completion.append(i)
+                done[i].set()
+
+        threads = [
+            threading.Thread(target=worker, args=(e,), daemon=True,
+                             name=f"exec-{plan.engines[e]}")
+            for e in range(n_eng) if plan.queues[e]]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        self.last_h2d_bytes += sum(eng_h2d)
+        self.last_d2h_bytes += sum(eng_d2h)
+        self.last_completion_order = completion
+        if trace:
+            merged = [sp for spans in eng_spans for sp in spans]
+            merged.sort(key=lambda s: (s[2], s[3]))
+            self.last_spans = merged
+        if errors:
+            errors.sort(key=lambda ie: ie[0])
+            raise errors[0][1]
 
 
 @register_op_handler("noop")

@@ -181,6 +181,46 @@ class ScheduleError(AssertionError):
     pass
 
 
+def dependency_edges(sched: Schedule
+                     ) -> Tuple[Dict[str, int], List[List[int]]]:
+    """Direct happens-before edges of the event program.
+
+    Returns ``(recorder, preds)``: ``recorder`` maps event name -> issue
+    index of the op that records it, ``preds[i]`` lists the issue indices
+    op ``i`` directly depends on — its stream predecessor plus the recorder
+    of every event it waits on.  The transitive closure of these edges IS
+    the schedule's happens-before relation; :func:`validate_schedule`
+    layers vector clocks on top of them and
+    :func:`repro.core.exec_plan.compile_executable` turns them into the
+    concurrent executor's ``threading.Event`` program.
+
+    Raises :class:`ScheduleError` on a twice-recorded event or a wait on a
+    never-recorded event (both make the edge list meaningless).
+    """
+    ops = sched.ops
+    n = len(ops)
+    recorder: Dict[str, int] = {}
+    for idx, op in enumerate(ops):
+        if op.records is not None:
+            if op.records.name in recorder:
+                raise ScheduleError(f"event {op.records.name} recorded twice")
+            recorder[op.records.name] = idx
+
+    preds: List[List[int]] = [[] for _ in range(n)]
+    last_in_stream: Dict[int, int] = {}
+    for idx, op in enumerate(ops):
+        if op.stream in last_in_stream:
+            preds[idx].append(last_in_stream[op.stream])
+        last_in_stream[op.stream] = idx
+        for ev in op.waits:
+            if ev.name not in recorder:
+                raise ScheduleError(
+                    f"op {op.tag} waits on never-recorded event {ev.name}"
+                )
+            preds[idx].append(recorder[ev.name])
+    return recorder, preds
+
+
 def validate_schedule(sched: Schedule) -> None:
     """Prove the event graph is correct — the property the paper's five event
     sets exist to enforce (§V: "To make sure data stored in device buffers is
@@ -200,26 +240,8 @@ def validate_schedule(sched: Schedule) -> None:
     """
     ops = sched.ops
     n = len(ops)
-    recorder: Dict[str, int] = {}
-    for idx, op in enumerate(ops):
-        if op.records is not None:
-            if op.records.name in recorder:
-                raise ScheduleError(f"event {op.records.name} recorded twice")
-            recorder[op.records.name] = idx
-
     # happens-before edges: stream program order + wait->record edges.
-    preds: List[List[int]] = [[] for _ in range(n)]
-    last_in_stream: Dict[int, int] = {}
-    for idx, op in enumerate(ops):
-        if op.stream in last_in_stream:
-            preds[idx].append(last_in_stream[op.stream])
-        last_in_stream[op.stream] = idx
-        for ev in op.waits:
-            if ev.name not in recorder:
-                raise ScheduleError(
-                    f"op {op.tag} waits on never-recorded event {ev.name}"
-                )
-            preds[idx].append(recorder[ev.name])
+    recorder, preds = dependency_edges(sched)
 
     # topo order / cycle check (1).
     state = [0] * n  # 0 unvisited, 1 on stack, 2 done

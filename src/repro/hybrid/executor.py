@@ -24,6 +24,8 @@ Chrome-trace lane-group per device (pid = device index).
 from __future__ import annotations
 
 import dataclasses
+import os
+import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple, Union
@@ -109,13 +111,33 @@ def device_schedule(hplan: HybridPlan, dp: DevicePlan) -> Schedule:
                             evict=plan.evict)
 
 
+# One process-wide pool for device jobs, created on first multi-device run
+# (constructing a fresh ThreadPoolExecutor per call cost thread spawns on
+# every hybrid kernel invocation — tuner sweeps make thousands).  Jobs never
+# submit nested jobs (the rebalance path re-enters run_hybrid_gemm from the
+# *calling* thread after the pool drained), so a fixed-size pool cannot
+# deadlock; excess jobs beyond the pool width simply queue.
+_POOL_LOCK = threading.Lock()
+_POOL: Optional[ThreadPoolExecutor] = None
+
+
+def _shared_pool() -> ThreadPoolExecutor:
+    global _POOL
+    with _POOL_LOCK:
+        if _POOL is None:
+            _POOL = ThreadPoolExecutor(
+                max_workers=max(4, os.cpu_count() or 1),
+                thread_name_prefix="hybrid-device")
+        return _POOL
+
+
 def _run_concurrent(jobs) -> list:
-    """Run one job per device concurrently (inline when there is only one:
-    no pool overhead for the degenerate single-device plan)."""
+    """Run one job per device on the shared pool (inline when there is only
+    one: no pool overhead for the degenerate single-device plan)."""
     if len(jobs) == 1:
         return [jobs[0]()]
-    with ThreadPoolExecutor(max_workers=len(jobs)) as pool:
-        return [f.result() for f in [pool.submit(j) for j in jobs]]
+    pool = _shared_pool()
+    return [f.result() for f in [pool.submit(j) for j in jobs]]
 
 
 def _execute(hplan: HybridPlan, make_io, ctx: Dict,
@@ -149,8 +171,12 @@ def _execute(hplan: HybridPlan, make_io, ctx: Dict,
         sched = device_schedule(hplan, dp)
         if validate:
             validate_schedule(sched)
+        # concurrent mode: each device's band genuinely overlaps its own
+        # H2D/compute/D2H engines (an armed fault plan falls back to the
+        # serial oracle inside run(); span recording is ported)
         ex = ScheduleExecutor(record_spans=record,
-                              trace_group=dp.device.name)
+                              trace_group=dp.device.name,
+                              mode="concurrent")
         operands, outputs = make_io(dp)
         faults = (fault_plans or {}).get(dp.device.name)
         t0 = time.perf_counter()

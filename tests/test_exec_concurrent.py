@@ -1,0 +1,367 @@
+"""Concurrent event-driven executor conformance (ISSUE 10, DESIGN.md §13).
+
+Three families:
+
+  * **differential conformance** — ``mode="concurrent"`` must be
+    bitwise-identical to the serial oracle on the full kernel corpus
+    (GEMM / SYRK / attention / Cholesky / LU x traversal x eviction
+    policy), with byte counters exactly equal to ``schedule_stats`` and a
+    completion order that is a linear extension of the dependency partial
+    order (the ``test_properties.py`` contract, shared with the simulator).
+  * **ExecutablePlan cache** — identity-keyed hits, invalidation on op
+    mutation and on late handler registration, instance-handler overrides.
+  * **concurrency safety** — a seeded stress run (many schedules x
+    repeated runs) under a ``faulthandler`` deadlock watchdog, and a
+    regression test that metric publishing from engine threads is
+    thread-safe.
+"""
+
+import dataclasses
+import faulthandler
+import threading
+
+import numpy as np
+import pytest
+
+import repro.core.ooc_attention  # noqa: F401  (registers attn handlers)
+from repro.core import (
+    ScheduleExecutor,
+    build_attention_schedule,
+    build_gemm_schedule,
+    build_syrk_schedule,
+    compile_executable,
+    compile_factor_pipeline,
+    factor_pipeline_spec,
+    plan_attention_partition,
+    plan_cache_stats,
+    plan_gemm_partition,
+    register_op_handler,
+    schedule_stats,
+    validate_schedule,
+)
+from repro.core.streams import BlockRef, dependency_edges
+
+# stress/deadlock hard timeout (seconds): generous vs the ~seconds the
+# corpus actually needs, tight enough that CI fails fast with a traceback
+# dump of every thread instead of hanging to the job timeout
+WATCHDOG_S = 300.0
+
+
+# --------------------------------------------------------------- helpers
+def _assert_linear_extension(sched, order):
+    """``order`` (issue indices in completion order) covers every op once
+    and never completes a dependent before its dependency."""
+    n = len(sched.ops)
+    assert sorted(order) == list(range(n)), "completion order is not a permutation"
+    pos = {op_idx: k for k, op_idx in enumerate(order)}
+    _, preds = dependency_edges(sched)
+    for succ in range(n):
+        for pred in preds[succ]:
+            assert pos[pred] < pos[succ], (
+                f"{sched.ops[succ].tag} completed before its dependency "
+                f"{sched.ops[pred].tag}")
+
+
+def _run_pair(sched, operands, make_outputs, ctx):
+    """Run serial then concurrent; assert bitwise outputs, exact byte
+    counters, and completion-order legality.  Returns the serial outputs."""
+    validate_schedule(sched)
+    stats = schedule_stats(sched)
+    results = {}
+    for mode in ("issue_order", "concurrent"):
+        ex = ScheduleExecutor(mode=mode)
+        outs = make_outputs()
+        ex.run(sched, operands, outs, ctx)
+        assert ex.last_h2d_bytes == stats["h2d_bytes"], mode
+        assert ex.last_d2h_bytes == stats["d2h_bytes"], mode
+        results[mode] = (outs, ex)
+    serial, conc = results["issue_order"], results["concurrent"]
+    for key in serial[0]:
+        assert np.array_equal(serial[0][key], conc[0][key]), (
+            f"concurrent output {key!r} diverged from serial")
+    _assert_linear_extension(sched, conc[1].last_completion_order)
+    assert serial[1].last_completion_order == list(range(len(sched.ops)))
+    return serial[0]
+
+
+def _gemm_case(rng, M=256, N=256, K=192, frac=3, **build_kw):
+    A = rng.standard_normal((M, K)).astype(np.float32)
+    B = rng.standard_normal((K, N)).astype(np.float32)
+    C = rng.standard_normal((M, N)).astype(np.float32)
+    budget = (A.nbytes + B.nbytes + C.nbytes) // frac
+    while True:
+        try:
+            part = plan_gemm_partition(M, N, K, budget, 4,
+                                       nbuf=build_kw.get("nbuf"),
+                                       nstreams=build_kw.get("nstreams"))
+            break
+        except ValueError:
+            # small random shapes (stress sweep) can undershoot the minimum
+            # aligned working set; a bigger budget still yields a valid
+            # (possibly shallower) OOC schedule
+            budget *= 2
+    sched = build_gemm_schedule(part, **build_kw)
+    return A, B, C, sched
+
+
+# ------------------------------------------------- corpus conformance
+@pytest.mark.parametrize("traversal", ["col", "row", "serpentine"])
+@pytest.mark.parametrize("evict", ["lru", "belady"])
+def test_gemm_concurrent_matches_serial(traversal, evict):
+    rng = np.random.default_rng(11)
+    A, B, C, sched = _gemm_case(rng, nstreams=2, nbuf=2,
+                                traversal=traversal, evict=evict)
+    out = _run_pair(sched, {"A": A, "B": B},
+                    lambda: {"C": np.array(C, copy=True)},
+                    {"alpha": 1.5, "beta": 0.5})
+    assert np.abs(out["C"] - (1.5 * A @ B + 0.5 * C)).max() < 1e-2
+
+
+@pytest.mark.parametrize("nstreams,nbuf", [(1, 1), (2, 2), (3, 2)])
+def test_gemm_concurrent_stream_depth_sweep(nstreams, nbuf):
+    rng = np.random.default_rng(12)
+    A, B, C, sched = _gemm_case(rng, nstreams=nstreams, nbuf=nbuf)
+    _run_pair(sched, {"A": A, "B": B},
+              lambda: {"C": np.array(C, copy=True)},
+              {"alpha": 1.0, "beta": 1.0})
+
+
+@pytest.mark.parametrize("traversal", ["col", "row"])
+def test_syrk_concurrent_matches_serial(traversal):
+    rng = np.random.default_rng(13)
+    n, K = 256, 192
+    P = rng.standard_normal((n, K)).astype(np.float32)
+    C = rng.standard_normal((n, n)).astype(np.float32)
+    part = plan_gemm_partition(n, n, K, (2 * P.nbytes + C.nbytes) // 2, 4,
+                               nbuf=2, nstreams=2)
+    sched = build_syrk_schedule(part, nstreams=2, nbuf=2,
+                                traversal=traversal)
+    out = _run_pair(sched, {"P": P},
+                    lambda: {"C": np.array(C, copy=True)},
+                    {"alpha": 1.0, "beta": 0.5})
+    assert np.abs(out["C"] - (P @ P.T + 0.5 * C)).max() < 1e-2
+
+
+def test_attention_concurrent_matches_serial():
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(14)
+    S, hkv, d, H = 512, 2, 64, 8
+    kc = rng.standard_normal((S, hkv, d)).astype(np.float32)
+    vc = rng.standard_normal((S, hkv, d)).astype(np.float32)
+    q = jnp.asarray(rng.standard_normal((H, d)).astype(np.float32))
+    part = plan_attention_partition(S, hkv, d, kc.nbytes, bytes_per_el=4)
+    sched = build_attention_schedule(part, hkv, d, H, nstreams=2, nbuf=2)
+    _run_pair(sched, {"K": kc, "V": vc},
+              lambda: {"out": np.zeros((H, d), np.float32)}, {"q": q})
+
+
+@pytest.mark.parametrize("kind", ["cholesky", "lu"])
+def test_factor_concurrent_matches_serial(kind):
+    rng = np.random.default_rng(15)
+    n = 384
+    A = rng.standard_normal((n, n)).astype(np.float64)
+    if kind == "cholesky":
+        A = A @ A.T + n * np.eye(n)
+    spec = factor_pipeline_spec(n, 128, 3 * n * n * 8, 8, kind=kind)
+    sched = compile_factor_pipeline(spec, nstreams=2, nbuf=2)
+    _run_pair(sched, {}, lambda: {"A": np.array(A, copy=True)},
+              {"alpha": -1.0, "beta": 1.0, "panel": spec.panel,
+               "n": spec.n})
+
+
+def test_concurrent_spans_cover_every_op_and_feed_analysis():
+    """record_spans in concurrent mode: one span per op, per-stream starts
+    monotone (each engine walks its queue in issue order), and the spans
+    are consumable by TraceAnalysis's wall-clock mode."""
+    from repro.obs.analyze import TraceAnalysis
+
+    rng = np.random.default_rng(16)
+    A, B, C, sched = _gemm_case(rng, nstreams=2, nbuf=2)
+    ex = ScheduleExecutor(mode="concurrent", record_spans=True)
+    out = {"C": np.array(C, copy=True)}
+    ex.run(sched, {"A": A, "B": B}, out, {"alpha": 1.0, "beta": 0.0})
+    spans = ex.last_spans
+    assert len(spans) == len(sched.ops)
+    assert sorted(tag for tag, *_ in spans) \
+        == sorted(op.tag for op in sched.ops)
+    for _, _, t0, t1 in spans:
+        assert t1 >= t0 >= 0.0
+    ana = TraceAnalysis.from_spans(sched, spans)
+    assert ana.n_ops == len(sched.ops)
+    assert ana.h2d_bytes == schedule_stats(sched)["h2d_bytes"]
+
+
+# ------------------------------------------------- ExecutablePlan cache
+def test_plan_cache_identity_hit():
+    rng = np.random.default_rng(17)
+    *_, sched = _gemm_case(rng)
+    before = plan_cache_stats()
+    p1 = compile_executable(sched)
+    p2 = compile_executable(sched)
+    after = plan_cache_stats()
+    assert p1 is p2
+    assert after["misses"] == before["misses"] + 1
+    assert after["hits"] >= before["hits"] + 1
+
+
+def test_plan_cache_invalidated_on_op_mutation():
+    rng = np.random.default_rng(18)
+    *_, sched = _gemm_case(rng)
+    p1 = compile_executable(sched)
+    i = next(idx for idx, op in enumerate(sched.ops)
+             if isinstance(op.payload, BlockRef))
+    sched.ops[i] = dataclasses.replace(sched.ops[i])   # fresh object, same op
+    p2 = compile_executable(sched)
+    assert p2 is not p1
+
+
+def test_plan_cache_invalidated_on_handler_registration():
+    rng = np.random.default_rng(19)
+    *_, sched = _gemm_case(rng)
+    p1 = compile_executable(sched)
+    register_op_handler("_test_exec_plan_dummy")(lambda st, op, ref: None)
+    p2 = compile_executable(sched)
+    assert p2 is not p1, "late registration must invalidate cached plans"
+
+
+def test_unknown_kernel_raises_in_concurrent_mode():
+    rng = np.random.default_rng(20)
+    A, B, C, sched = _gemm_case(rng)
+    i = next(idx for idx, op in enumerate(sched.ops)
+             if isinstance(op.payload, BlockRef))
+    sched.ops[i] = dataclasses.replace(
+        sched.ops[i], payload=BlockRef("definitely_not_registered", 0))
+    ex = ScheduleExecutor(mode="concurrent")
+    with pytest.raises(KeyError, match="definitely_not_registered"):
+        ex.run(sched, {"A": A, "B": B}, {"C": np.array(C, copy=True)},
+               {"alpha": 1.0, "beta": 0.0})
+
+
+def test_instance_handlers_override_plan_resolution():
+    rng = np.random.default_rng(21)
+    A, B, C, sched = _gemm_case(rng)
+    calls = []
+
+    def spy(st, op, ref):
+        calls.append(op.tag)
+        from repro.core.runtime import _dgemm_handler
+        _dgemm_handler(st, op, ref)
+
+    compile_executable(sched)   # pre-resolve against the global registry
+    ex = ScheduleExecutor(handlers={"dgemm": spy}, mode="concurrent")
+    out = {"C": np.array(C, copy=True)}
+    ex.run(sched, {"A": A, "B": B}, out, {"alpha": 1.5, "beta": 0.5})
+    assert calls, "instance handler was never consulted"
+    assert np.abs(out["C"] - (1.5 * A @ B + 0.5 * C)).max() < 1e-2
+
+
+def test_faults_fall_back_to_serial_and_recover():
+    from repro.core.streams import OpKind
+    from repro.fault import FaultPlan, FaultSpec
+
+    rng = np.random.default_rng(22)
+    A, B, C, sched = _gemm_case(rng)
+    ref = _run_pair(sched, {"A": A, "B": B},
+                    lambda: {"C": np.array(C, copy=True)},
+                    {"alpha": 1.0, "beta": 1.0})
+    h2d = next(i for i, op in enumerate(sched.ops)
+               if op.kind == OpKind.H2D)
+    plan = FaultPlan(specs=(FaultSpec(op=h2d, cls="h2d_error", times=1),))
+    ex = ScheduleExecutor(mode="concurrent")
+    out = {"C": np.array(C, copy=True)}
+    ex.run(sched, {"A": A, "B": B}, out, {"alpha": 1.0, "beta": 1.0},
+           faults=plan)
+    assert ex.last_fault_stats["injected"] == 1
+    assert ex.last_fault_stats["recovered_retry"] == 1
+    assert np.array_equal(out["C"], ref["C"]), \
+        "fault fallback must still match the fault-free result"
+
+
+# ------------------------------------------------- concurrency safety
+def test_concurrent_stress_seeded_with_watchdog():
+    """Many schedule shapes x repeated runs on one executor: results must
+    stay bitwise-stable across reps (no lost updates, no reordering races).
+    A faulthandler watchdog turns any deadlock into a traceback dump of
+    every thread plus a hard interpreter exit instead of a silent hang."""
+    faulthandler.dump_traceback_later(WATCHDOG_S, exit=True)
+    try:
+        rng = np.random.default_rng(20260808)
+        ex = ScheduleExecutor(mode="concurrent")
+        for _ in range(6):
+            M, N, K = (int(v) * 64 for v in rng.integers(2, 5, size=3))
+            nstreams = int(rng.integers(1, 4))
+            nbuf = int(rng.integers(1, 4))
+            traversal = ["col", "row", "serpentine"][int(rng.integers(3))]
+            A, B, C, sched = _gemm_case(
+                rng, M=M, N=N, K=K, nstreams=nstreams, nbuf=nbuf,
+                traversal=traversal)
+            stats = schedule_stats(sched)
+            ref = None
+            for _rep in range(3):
+                out = {"C": np.array(C, copy=True)}
+                ex.run(sched, {"A": A, "B": B}, out,
+                       {"alpha": 1.0, "beta": 0.5})
+                assert ex.last_h2d_bytes == stats["h2d_bytes"]
+                assert ex.last_d2h_bytes == stats["d2h_bytes"]
+                _assert_linear_extension(sched,
+                                         ex.last_completion_order)
+                if ref is None:
+                    ref = out["C"]
+                else:
+                    assert np.array_equal(out["C"], ref), (
+                        f"run-to-run divergence on {M}x{N}x{K} "
+                        f"ns={nstreams} nbuf={nbuf} {traversal}")
+    finally:
+        faulthandler.cancel_dump_traceback_later()
+
+
+def test_metric_publishing_from_engine_threads_is_thread_safe():
+    """Regression: the one-lock MetricRegistry must survive concurrent
+    publishes — both raw increments hammered from worker threads and full
+    executor runs racing each other (engine threads publish through
+    ``record_executor_run`` at run end and handlers may publish inline)."""
+    from repro.obs import get_observability
+
+    obs = get_observability()
+    obs.reset()
+    obs.enable(metrics=True)
+    try:
+        reg = obs.metrics
+        c = reg.counter("repro_test_engine_total", "stress counter")
+        threads = [
+            threading.Thread(
+                target=lambda: [c.inc(kernel="stress")
+                                for _ in range(500)])
+            for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert c.value(kernel="stress") == 8 * 500
+
+        # whole executor runs racing: per-run aggregates must still sum
+        rng = np.random.default_rng(23)
+        A, B, C, sched = _gemm_case(rng, M=128, N=128, K=128, frac=2)
+        stats = schedule_stats(sched)
+        n_runs = 4
+
+        def one_run():
+            ex = ScheduleExecutor(mode="concurrent")
+            ex.run(sched, {"A": A, "B": B},
+                   {"C": np.array(C, copy=True)},
+                   {"alpha": 1.0, "beta": 0.0})
+
+        runners = [threading.Thread(target=one_run)
+                   for _ in range(n_runs)]
+        for t in runners:
+            t.start()
+        for t in runners:
+            t.join()
+        kernel = sched.meta.get("kernel", "run")
+        assert reg.get("repro_executor_runs_total").value(
+            kernel=kernel) == n_runs
+        assert reg.get("repro_executor_h2d_bytes").value(
+            kernel=kernel) == n_runs * stats["h2d_bytes"]
+    finally:
+        obs.reset()

@@ -177,6 +177,40 @@ def test_executor_completion_extends_simulator_order(M, N, K, nstreams,
                                rtol=1e-4, atol=1e-4)
 
 
+@given(M=dims, N=dims, K=st.sampled_from([128, 256]),
+       nstreams=st.sampled_from([1, 2, 3]),
+       nbuf=st.sampled_from([1, 2, 3]))
+@settings(max_examples=10, deadline=None)
+def test_concurrent_completion_is_linear_extension(M, N, K, nstreams, nbuf):
+    """mode="concurrent" may complete ops out of issue order, but the
+    observed completion order must still be a linear extension of the
+    dependency partial order — and the result stays bitwise equal to the
+    serial oracle's."""
+    rng = np.random.default_rng(M * 3 + N * 5 + K)
+    full = (M * K + K * N + M * N) * 4
+    part = plan_gemm_partition(M, N, K, max(full // 4, 700_000), 4)
+    sched = build_gemm_schedule(part, nstreams=nstreams, nbuf=nbuf)
+    validate_schedule(sched)
+
+    A = rng.standard_normal((M, K)).astype(np.float32)
+    B = rng.standard_normal((K, N)).astype(np.float32)
+    C_ser = np.zeros((M, N), dtype=np.float32)
+    ScheduleExecutor().run(sched, {"A": A, "B": B}, {"C": C_ser},
+                           {"alpha": 1.0, "beta": 0.0})
+    C_conc = np.zeros((M, N), dtype=np.float32)
+    ex = ScheduleExecutor(mode="concurrent")
+    ex.run(sched, {"A": A, "B": B}, {"C": C_conc},
+           {"alpha": 1.0, "beta": 0.0})
+    assert np.array_equal(C_ser, C_conc)
+    order = ex.last_completion_order
+    assert sorted(order) == list(range(len(sched.ops)))
+    pos = {op_idx: k for k, op_idx in enumerate(order)}
+    for pred, succ in _dependency_edges(sched):
+        assert pos[pred] < pos[succ], (
+            f"concurrent completion violated dependency "
+            f"{sched.ops[pred].tag} -> {sched.ops[succ].tag}")
+
+
 def test_factor_executor_conformance():
     """The multi-kernel factor schedule (panel ops + trailing stream +
     lookahead reordering) also completes as a linear extension of its
